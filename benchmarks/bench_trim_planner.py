@@ -1,0 +1,54 @@
+"""Beyond-paper: TRIM as a TPU sharding planner (DESIGN.md §3.2).
+
+For each assigned architecture x shape, run the TRIM planner over the
+dominant workloads and report the recommended (data_dim, model_dim)
+spatial assignment.  Sanity claims: training shapes with wide FFs pick
+token-sharding on the data axis (N) and feature-sharding on the model
+axis (M) — i.e. TRIM rediscovers FSDP x TP from first principles."""
+from __future__ import annotations
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.tpu_adapter import plan_cell
+
+from .common import Timer, claim
+
+
+def run():
+    t = Timer()
+    out = {"plans": {}}
+    for arch in ("nemotron-4-15b", "granite-moe-1b-a400m", "mamba2-2.7b",
+                 "deepseek-v2-lite-16b", "smollm-135m"):
+        cfg = ARCHS[arch]
+        for shape in ("train_4k", "decode_32k"):
+            if shape in cfg.skip_shapes:
+                continue
+            plans = plan_cell(cfg, SHAPES[shape], data_par=32,
+                              model_par=16)
+            out["plans"][f"{arch}|{shape}"] = {
+                w: {"data": c.data_dim, "model": c.model_dim,
+                    "cycles": c.cycles} for w, c in plans.items()}
+    out["_us"] = t.us()
+
+    train_plans = [v for k, v in out["plans"].items() if "train" in k]
+    n_data = sum(1 for p in train_plans for c in p.values()
+                 if c["data"] == "N")
+    n_tot = sum(len(p) for p in train_plans)
+    claim(out, "planner picks token (N) sharding on the data axis for "
+          "most training matmuls (rediscovers DP)",
+          n_data >= 0.6 * n_tot, f"{n_data}/{n_tot}")
+    n_m = sum(1 for p in train_plans for c in p.values()
+              if c["model"] in ("M", "C"))
+    claim(out, "planner picks feature/reduction sharding on the model "
+          "axis (rediscovers TP)", n_m >= 0.6 * n_tot,
+          f"{n_m}/{n_tot}")
+    return out
+
+
+def rows(res):
+    r = [("trim_planner", res["_us"], f"cells={len(res['plans'])}")]
+    for k, v in list(res["plans"].items())[:6]:
+        dom = max(v.items(), key=lambda kv: kv[1]["cycles"])
+        r.append((f"plan[{k}]", 0.0,
+                  f"dominant={dom[0]}:data>{dom[1]['data']},"
+                  f"model>{dom[1]['model']}"))
+    return r

@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes `run() -> dict` (raw numbers) and
+`rows(result) -> list[(name, us_per_call, derived)]` for the CSV contract
+of benchmarks/run.py.  Paper-claim checks live next to the numbers so
+EXPERIMENTS.md can cite pass/fail per claim.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (MapperConfig, evaluate_architecture,
+                        make_fpga_arch, make_spatial_arch, analyze)
+from repro.core.task_analyst import NETWORKS
+
+# paper §5.2 utilization constraints
+THROUGHPUT_CFG = dict(pe_utilization_min=0.75)
+ENERGY_CFG = dict(innermem_utilization_min=0.5)
+
+
+def mapper_cfg(goal: str, max_mappings: int = 6000, seed: int = 0,
+               **kw) -> MapperConfig:
+    extra = dict(THROUGHPUT_CFG if goal == "latency" else ENERGY_CFG)
+    extra.update(kw)
+    return MapperConfig(max_mappings=max_mappings, seed=seed, **extra)
+
+
+# The paper's FPGA design points (Table 3)
+FPGA_POINTS = {
+    "FPGA-1": dict(num_pes=8, cache_kb=20),
+    "FPGA-2": dict(num_pes=16, cache_kb=24),
+    "FPGA-3": dict(num_pes=32, cache_kb=32),
+    "FPGA-4": dict(num_pes=64, cache_kb=48),
+    "FPGA-5": dict(num_pes=128, cache_kb=80),
+}
+
+
+def fpga(name: str):
+    return make_fpga_arch(name=name, **FPGA_POINTS[name])
+
+
+def eval_network_on(hw, network_key: str, *, goal: str, batch_size=64,
+                    seed=0, max_mappings=6000, cache_level=None):
+    task = NETWORKS[network_key](batch_size=batch_size)
+    tw = analyze(task)
+    cfg = mapper_cfg(goal, max_mappings=max_mappings, seed=seed)
+    cache = cache_level or ("BRAM" if any(
+        lv.name == "BRAM" for lv in hw.tiling_levels) else "Gbuf")
+    return evaluate_architecture(tw, hw, cfg, goal=goal, cache_level=cache)
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us(self, calls: int = 1) -> float:
+        return (time.time() - self.t0) * 1e6 / max(calls, 1)
+
+
+def claim(results: Dict, name: str, ok: bool, detail: str):
+    results.setdefault("claims", []).append(
+        {"claim": name, "ok": bool(ok), "detail": detail})
+    print(f"    claim[{'PASS' if ok else 'FAIL'}] {name}: {detail}")

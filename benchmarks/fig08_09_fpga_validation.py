@@ -1,0 +1,57 @@
+"""Paper Fig. 8 + Fig. 9: TRIM modeling of the proposed FPGA design.
+
+Fig. 8: per-phase (FW/BW/WG) time & energy of modified AlexNet training on
+the 32-PE / 32 KB FPGA.  Fig. 9: normalized training time/energy across
+AlexNet / VGG-11 / ResNet-20 (CIFAR-10).
+
+The paper validates against a physical PYNQ-Z1 (<10% time / <20% energy
+error); without the board we reproduce the *structure* the errors were
+measured on and check the physically-required invariants (BW+WG backward
+work ≈ 2x FW; energy ordering follows MAC counts).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from .common import Timer, claim, eval_network_on, fpga
+
+
+def run(max_mappings=4000):
+    out = {"phases": {}, "networks": {}}
+    hw = fpga("FPGA-3")
+    t = Timer()
+    res = eval_network_on(hw, "alexnet-cifar", goal="latency",
+                          batch_size=64, max_mappings=max_mappings)
+    out["_us"] = t.us()
+    phase = defaultdict(lambda: {"cycles": 0.0, "pj": 0.0, "macs": 0.0})
+    for r in res.per_workload:
+        p = phase[r.workload.phase]
+        p["cycles"] += r.estimate.cycles
+        p["pj"] += r.estimate.energy_pj
+        p["macs"] += r.estimate.macs
+    out["phases"] = {k: dict(v) for k, v in phase.items()}
+
+    fw, bw, wg = (phase[p]["macs"] for p in ("FW", "BW", "WG"))
+    claim(out, "backward work ~2x forward (training structure)",
+          1.0 <= (bw + wg) / fw <= 4.0,
+          f"(BW+WG)/FW MACs = {(bw + wg) / fw:.2f}")
+
+    for net in ("alexnet-cifar", "vgg11-cifar", "resnet20-cifar"):
+        r = eval_network_on(hw, net, goal="latency", batch_size=64,
+                            max_mappings=max_mappings)
+        out["networks"][net] = {
+            "cycles": r.network.cycles, "energy_pj": r.network.energy_pj,
+            "seconds": r.network.seconds(hw)}
+    a, v = out["networks"]["alexnet-cifar"], out["networks"]["vgg11-cifar"]
+    claim(out, "VGG-11 costs more than AlexNet (Fig. 9 ordering)",
+          v["cycles"] > a["cycles"] and v["energy_pj"] > a["energy_pj"],
+          f"vgg/alex cycles {v['cycles'] / a['cycles']:.2f}x")
+    return out
+
+
+def rows(res):
+    r = [("fig08_alexnet_fpga3", res["_us"],
+          f"phases={len(res['phases'])}")]
+    for net, d in res["networks"].items():
+        r.append((f"fig09_{net}", 0.0, f"cycles={d['cycles']:.3e}"))
+    return r

@@ -1,0 +1,75 @@
+"""Paper Fig. 10/11/12 + Table 3: the five FPGA design points.
+
+For each FPGA-1..5 and each network, search the highest-throughput mapping
+and record normalized time (Fig. 10), energy (Fig. 11), and PE/cache
+utilization (Fig. 12).  Paper claims reproduced:
+
+  * time decreases as resources grow — EXCEPT FPGA-5 on ResNet-20, whose
+    small per-layer parallelism cannot fill 128 PEs (Fig. 10 discussion);
+  * AlexNet FPGA-5 vs FPGA-4 speedup ~1.38x; VGG-11 ~1.31x;
+  * FPGA-1..3 sustain high PE utilization on all three networks;
+  * ResNet-20 cache utilization is the lowest (fewer params per layer).
+"""
+from __future__ import annotations
+
+from .common import FPGA_POINTS, Timer, claim, eval_network_on, fpga
+
+NETS = ("alexnet-cifar", "vgg11-cifar", "resnet20-cifar")
+
+
+def run(max_mappings=4000):
+    out = {"grid": {}}
+    t = Timer()
+    for name in FPGA_POINTS:
+        hw = fpga(name)
+        for net in NETS:
+            r = eval_network_on(hw, net, goal="latency", batch_size=64,
+                                max_mappings=max_mappings)
+            pe_util = sum(x.estimate.pe_utilization * x.estimate.macs
+                          for x in r.per_workload) / \
+                sum(x.estimate.macs for x in r.per_workload)
+            cache_util = max(
+                x.estimate.buffer_utilization.get("BRAM", 0.0)
+                for x in r.per_workload)
+            out["grid"][f"{name}|{net}"] = {
+                "cycles": r.network.cycles,
+                "energy_pj": r.network.energy_pj,
+                "pe_util": pe_util, "cache_util": cache_util}
+    out["_us"] = t.us()
+
+    g = out["grid"]
+    for net in NETS:
+        cyc = [g[f"FPGA-{i}|{net}"]["cycles"] for i in range(1, 6)]
+        mono = all(cyc[i + 1] <= cyc[i] * 1.02 for i in range(3))
+        claim(out, f"time decreases FPGA-1..4 on {net}", mono,
+              " -> ".join(f"{c:.2e}" for c in cyc))
+    a45 = g["FPGA-4|alexnet-cifar"]["cycles"] / \
+        g["FPGA-5|alexnet-cifar"]["cycles"]
+    claim(out, "AlexNet FPGA-5 speedup over FPGA-4 ~1.38x (paper)",
+          1.1 <= a45 <= 2.1, f"measured {a45:.2f}x")
+    r45 = g["FPGA-4|resnet20-cifar"]["cycles"] / \
+        g["FPGA-5|resnet20-cifar"]["cycles"]
+    a_gain = a45
+    claim(out, "ResNet-20 gains less from FPGA-5 than AlexNet "
+          "(limited parallelism)", r45 <= a_gain + 0.05,
+          f"resnet {r45:.2f}x vs alexnet {a_gain:.2f}x")
+    small_util = min(g[f"FPGA-{i}|{n}"]["pe_util"]
+                     for i in (1, 2, 3) for n in NETS)
+    claim(out, "FPGA-1..3 keep high PE utilization (Fig. 12)",
+          small_util >= 0.7, f"min util {small_util:.2f}")
+    rn_cache = max(g[f"FPGA-{i}|resnet20-cifar"]["cache_util"]
+                   for i in range(1, 6))
+    ax_cache = max(g[f"FPGA-{i}|alexnet-cifar"]["cache_util"]
+                   for i in range(1, 6))
+    claim(out, "ResNet-20 cache utilization below AlexNet (Fig. 12)",
+          rn_cache <= ax_cache, f"{rn_cache:.2f} vs {ax_cache:.2f}")
+    return out
+
+
+def rows(res):
+    out = [("fig10_12_fpga_grid", res["_us"],
+            f"cells={len(res['grid'])}")]
+    for k, v in res["grid"].items():
+        out.append((f"fig10[{k}]", 0.0,
+                    f"cycles={v['cycles']:.3e};pe_util={v['pe_util']:.2f}"))
+    return out

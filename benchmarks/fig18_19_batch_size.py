@@ -1,0 +1,47 @@
+"""Paper Fig. 18/19 (case study I, §8.2.3): batch-size sweep on AlexNet.
+
+Claims: larger batches amortize weight traffic into more on-chip reuse —
+batch 16 ~3.1x more energy-efficient per op than batch 1; the marginal
+gain saturates (batch 128 ~ batch 64, hardware-resource-bound); the gain
+is spread across phases (also applies to inference accelerators)."""
+from __future__ import annotations
+
+from repro.core import make_spatial_arch
+
+from .common import Timer, claim, eval_network_on
+
+BATCHES = (1, 4, 16, 64, 128)
+
+
+def run(max_mappings=3000):
+    t = Timer()
+    hw = make_spatial_arch(name="train_asic", num_pes=256, rf_words=256,
+                           gbuf_words=64 * 1024, bits=32, zero_skip=True)
+    out = {"batches": {}}
+    for b in BATCHES:
+        r = eval_network_on(hw, "alexnet-cifar", goal="energy",
+                            batch_size=b, max_mappings=max_mappings)
+        out["batches"][b] = {"energy_per_mac": r.network.energy_per_mac_pj,
+                             "cycles": r.network.cycles}
+    out["_us"] = t.us()
+    e = {b: out["batches"][b]["energy_per_mac"] for b in BATCHES}
+    claim(out, "energy/op decreases with batch size (5% search noise)",
+          all(e[BATCHES[i + 1]] <= e[BATCHES[i]] * 1.05
+              for i in range(len(BATCHES) - 1)),
+          " ".join(f"b{b}:{v:.2f}pJ" for b, v in e.items()))
+    # paper measures 3.1x; our steeper DRAM/SRAM energy ratio amplifies the
+    # same effect — direction and saturation must match (EXPERIMENTS.md).
+    g16 = e[1] / e[16]
+    claim(out, "batch16 vs batch1 gain (paper 3.1x; same direction, "
+          "ours larger — steeper DRAM:SRAM energy ratio)",
+          1.5 <= g16 <= 12.0, f"measured {g16:.2f}x")
+    g128 = e[64] / e[128]
+    claim(out, "batch 128 ~ batch 64 (saturation)",
+          g128 <= 1.15, f"b64/b128 energy ratio {g128:.3f}")
+    return out
+
+
+def rows(res):
+    return [("fig18_19_batch", res["_us"],
+             ";".join(f"b{b}={v['energy_per_mac']:.2f}pJ"
+                      for b, v in res["batches"].items()))]

@@ -1,0 +1,82 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV; exits non-zero if any paper claim
+fails.  ``--fast`` shrinks mapspace budgets for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import traceback
+
+MODULES = [
+    ("table4_fpga_resources", {}),
+    ("fig08_09_fpga_validation", {"max_mappings": 4000}),
+    ("fig10_12_fpga_scaling", {"max_mappings": 4000}),
+    ("fig15_eyeriss", {"max_mappings": 6000}),
+    ("fig16_17_zero_skipping", {"max_mappings": 3000}),
+    ("fig18_19_batch_size", {"max_mappings": 3000}),
+    ("fig20_21_edp_dse", {"max_mappings": 1500}),
+    ("bench_mapspace_throughput", {}),
+    ("bench_trim_planner", {}),
+]
+
+FAST_OVERRIDES = {"max_mappings": 600}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default="experiments/benchmarks.json")
+    args = ap.parse_args()
+
+    all_rows = []
+    all_claims = []
+    results = {}
+    failed = False
+    for name, kw in MODULES:
+        if args.only and args.only not in name:
+            continue
+        if args.fast:
+            kw = {k: (FAST_OVERRIDES.get(k, v)) for k, v in kw.items()}
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"== {name} ==", flush=True)
+        try:
+            res = mod.run(**kw)
+        except Exception:
+            traceback.print_exc()
+            failed = True
+            continue
+        results[name] = res
+        all_claims += res.get("claims", [])
+        import jax
+        jax.clear_caches()          # bound the XLA code-cache footprint
+        for row in mod.rows(res):
+            all_rows.append(row)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    n_ok = sum(1 for c in all_claims if c["ok"])
+    print(f"\npaper-claims: {n_ok}/{len(all_claims)} pass")
+    for c in all_claims:
+        if not c["ok"]:
+            print(f"  FAILED: {c['claim']} — {c['detail']}")
+            failed = True
+
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump({"claims": all_claims,
+                       "rows": [list(r) for r in all_rows]}, f, indent=1,
+                      default=str)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

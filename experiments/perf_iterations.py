@@ -1,0 +1,91 @@
+"""§Perf hillclimbing driver: run named variants of a cell, record the
+three roofline terms per iteration (hypothesis -> change -> before ->
+after) into experiments/perf/<cell>__<variant>.json.
+
+    PYTHONPATH=src python experiments/perf_iterations.py --cell \
+        granite-moe-1b-a400m:train_4k --variants baseline,remat_full,...
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+VARIANTS = {
+    # name: kwargs for run_cell + module tweaks
+    "baseline": {},
+    "remat_full": {"remat": "full"},
+    "remat_none": {"remat": "none"},
+    "remat_dots": {"remat": "dots"},
+    "micro1": {"microbatches": 1},
+    "micro2": {"microbatches": 2},
+    "micro8": {"microbatches": 8},
+    "mla_absorb": {"mla_absorb": True},
+    "grad_int8": {"grad_compression": True},
+    "trim_sharding": {"sharding_mode": "trim"},
+    "no_fsdp": {"fsdp": False},
+    "seq_shard": {"seq_shard": True},
+    "kblock512": {"_attn_kblock": 512},
+    "kblock2048": {"_attn_kblock": 2048},
+    "dense_attn": {"_attn_threshold": 10 ** 9},
+    # round-2 combinations (best single changes stacked)
+    "micro1_nofsdp": {"microbatches": 1, "fsdp": False},
+    "micro2_nofsdp": {"microbatches": 2, "fsdp": False},
+    "rematfull_micro8": {"remat": "full", "microbatches": 8},
+    "rematfull_micro2": {"remat": "full", "microbatches": 2},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)   # arch:shape
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+
+    from repro.launch.dryrun import run_cell
+    from repro.models import attention as attn_mod
+
+    for name in args.variants.split(","):
+        kw = dict(VARIANTS[name])
+        kb = kw.pop("_attn_kblock", None)
+        th = kw.pop("_attn_threshold", None)
+        old_kb, old_th = (attn_mod.BLOCKED_ATTN_KBLOCK,
+                          attn_mod.BLOCKED_ATTN_THRESHOLD)
+        if kb:
+            attn_mod.BLOCKED_ATTN_KBLOCK = kb
+        if th:
+            attn_mod.BLOCKED_ATTN_THRESHOLD = th
+        try:
+            res = run_cell(arch, shape, multi_pod=args.mesh == "multi",
+                           **kw)
+        except Exception as e:  # noqa: BLE001
+            res = {"error": f"{type(e).__name__}: {e}"}
+        finally:
+            attn_mod.BLOCKED_ATTN_KBLOCK = old_kb
+            attn_mod.BLOCKED_ATTN_THRESHOLD = old_th
+        path = os.path.join(args.out,
+                            f"{arch}__{shape}__{args.mesh}__{name}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if "roofline" in res:
+            r = res["roofline"]
+            gb = 1024 ** 3
+            print(f"{name:14s} ct={r['compute_s']:.3e} "
+                  f"mt={r['memory_s']:.3e} lt={r['collective_s']:.3e} "
+                  f"bot={r['bottleneck'][:4]} frac={r['roofline_fraction']:.4f} "
+                  f"temp={res['memory']['temp_bytes'] / gb:.1f}GB",
+                  flush=True)
+        else:
+            print(f"{name:14s} ERROR {res.get('error', '?')[:80]}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

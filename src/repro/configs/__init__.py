@@ -1,0 +1,6 @@
+from .base import ModelConfig
+from .registry import ARCHS, get_config, reduced_config
+from .shapes import SHAPES, ShapeSpec, is_skipped
+
+__all__ = ["ModelConfig", "ARCHS", "get_config", "reduced_config",
+           "SHAPES", "ShapeSpec", "is_skipped"]

@@ -1,0 +1,150 @@
+"""TRIM Explorer (paper §6.3, Algorithm 1).
+
+For each hardware description in the architecture space:
+  for each intra-layer workload: build + evaluate its mapspace, keep the
+  optimal mapping per the design goal; then combine optimal mappings with
+  inter-layer workloads into a network-level estimate; finally select the
+  optimal architecture.
+
+Identical workloads (repeated layers) share one mapspace evaluation.
+Evaluation uses the vectorized batch evaluator when available (falls back to
+the scalar path transparently).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .designer import HardwareDesc
+from .evaluator import (Estimate, NetworkEstimate, evaluate_mapping,
+                        evaluate_network)
+from .mapper import MapperConfig, Mapspace, build_mapspace
+from .mapping import Mapping
+from .task_analyst import TaskDescription, TaskWorkloads, analyze
+from .workload import TENSORS, Workload
+
+GOALS: Dict[str, Callable[[Estimate], float]] = {
+    "latency": lambda e: e.cycles,
+    "energy": lambda e: e.energy_pj,
+    "edp": lambda e: e.edp,
+}
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    workload: Workload
+    mapping: Mapping
+    estimate: Estimate
+    mapspace_size: int
+    n_valid: int
+
+
+@dataclasses.dataclass
+class ArchResult:
+    hardware: HardwareDesc
+    network: NetworkEstimate
+    per_workload: List[WorkloadResult]
+
+    def goal_value(self, goal: str) -> float:
+        if goal == "latency":
+            return self.network.cycles
+        if goal == "energy":
+            return self.network.energy_pj
+        return self.network.edp
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    best: ArchResult
+    all_archs: List[ArchResult]
+    goal: str
+
+
+def _workload_key(wl: Workload):
+    return (wl.dims, wl.stride, wl.dilation, wl.kind, wl.depthwise,
+            round(wl.input_zero_frac, 9), round(wl.weight_zero_frac, 9))
+
+
+def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
+                         cfg: Optional[MapperConfig] = None,
+                         goal: str = "edp",
+                         use_batch: bool = True) -> WorkloadResult:
+    """Search one workload's mapspace for the goal-optimal mapping."""
+    cfg = cfg or MapperConfig()
+    space = build_mapspace(workload, hw, cfg)
+    if not space.mappings:
+        raise RuntimeError(
+            f"empty valid mapspace for {workload.name} on {hw.name}")
+    score = GOALS[goal]
+    best_m, best_e, best_v = None, None, math.inf
+    if use_batch and len(space.mappings) >= 64:
+        try:
+            from .batch_eval import batch_best_index
+            idx = batch_best_index(space.mappings, goal)
+            best_m = space.mappings[idx]
+            best_e = evaluate_mapping(best_m)
+            best_v = score(best_e)
+        except Exception:
+            best_m = None
+    if best_m is None:
+        for m in space.mappings:
+            e = evaluate_mapping(m)
+            v = score(e)
+            if v < best_v:
+                best_m, best_e, best_v = m, e, v
+    return WorkloadResult(workload=workload, mapping=best_m, estimate=best_e,
+                          mapspace_size=space.total_candidates,
+                          n_valid=space.n_valid)
+
+
+def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
+                          cfg: Optional[MapperConfig] = None,
+                          goal: str = "edp",
+                          cache_level: str = "Gbuf",
+                          use_batch: bool = True) -> ArchResult:
+    """Algorithm 1 lines 6-15 for one hardware description."""
+    cfg = cfg or MapperConfig()
+    cache: Dict[tuple, WorkloadResult] = {}
+    results: List[WorkloadResult] = []
+    for wl in task_workloads.intra:
+        key = _workload_key(wl)
+        if key not in cache:
+            cache[key] = find_optimal_mapping(wl, hw, cfg, goal, use_batch)
+        r = cache[key]
+        results.append(dataclasses.replace(r, workload=wl))
+    max_buf = 0.0
+    for r in results:
+        for li in hw.memory_level_indices():
+            lv = hw.tiling_levels[li]
+            if lv.name == cache_level:
+                used = sum(r.mapping.buffer_words(li, t) for t in TENSORS)
+                max_buf = max(max_buf, used)
+    network = evaluate_network(
+        hw, [r.estimate for r in results], task_workloads.preproc,
+        task_workloads.activations, cache_level=cache_level,
+        mapping_buffer_words=max_buf)
+    return ArchResult(hardware=hw, network=network, per_workload=results)
+
+
+def explore(task: TaskDescription, arch_space: Iterable[HardwareDesc],
+            goal: str = "edp", cfg: Optional[MapperConfig] = None,
+            cache_level: str = "Gbuf", use_batch: bool = True,
+            verbose: bool = False) -> ExplorationResult:
+    """Paper Algorithm 1 — full design-space exploration."""
+    cfg = cfg or MapperConfig()
+    workloads = analyze(task)
+    all_archs: List[ArchResult] = []
+    best: Optional[ArchResult] = None
+    for hw in arch_space:
+        res = evaluate_architecture(workloads, hw, cfg, goal, cache_level,
+                                    use_batch)
+        all_archs.append(res)
+        if best is None or res.goal_value(goal) < best.goal_value(goal):
+            best = res
+        if verbose:
+            n = res.network
+            print(f"  {hw.name:28s} cycles={n.cycles:.3e} "
+                  f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}")
+    assert best is not None, "empty architecture space"
+    return ExplorationResult(best=best, all_archs=all_archs, goal=goal)

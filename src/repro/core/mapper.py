@@ -1,0 +1,291 @@
+"""TRIM Mapper (paper §5): mapping constructor, validator, mapspace pruner.
+
+The constructor factorizes each workload loop bound across the tiling levels
+(paper: "the Cartesian product of the cofactor sets for each dimension"),
+enumerates loop orders per memory level and bypass choices — a space of size
+(cofactor products) x (7!)^N x (2^N)^3, "in the trillions".  We therefore:
+
+  * enumerate ordered factorizations exactly, but sample the cartesian
+    product deterministically when it exceeds the budget;
+  * use a representative loop-order set per level (stationarity classes:
+    output/weight/input-stationary + row-stationary-like) plus optional
+    seeded random orders — `orders="exhaustive"` enables all 5040 for tiny
+    studies;
+  * validate buffer capacities (incl. reserved inter-layer activation words,
+    paper §5) and spatial fan-out;
+  * prune with the paper's two utilization constraints (§5.2): PE
+    utilization >= 0.75 when the goal is throughput, innermost-memory
+    utilization >= 0.5 when the goal is energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .designer import HardwareDesc
+from .mapping import Mapping
+from .workload import DIMS, TENSORS, Workload, N_, M_, C_, R_, S_, E_, F_
+
+# -- loop-order templates ---------------------------------------------------
+# Outermost-first permutations of dim indices (N,M,C,R,S,E,F).
+REPRESENTATIVE_ORDERS: Tuple[Tuple[int, ...], ...] = (
+    (N_, M_, C_, R_, S_, E_, F_),   # canonical (paper Fig. 3)
+    (N_, E_, F_, M_, C_, R_, S_),   # output-stationary (reduction innermost)
+    (C_, R_, S_, N_, M_, E_, F_),   # reduction outermost
+    (N_, C_, E_, F_, M_, R_, S_),
+    (M_, C_, R_, S_, N_, E_, F_),   # weight-stationary (W dims outer)
+    (N_, E_, F_, C_, M_, R_, S_),
+    (N_, C_, F_, E_, S_, R_, M_),   # input-stationary-ish (M innermost)
+    (M_, N_, E_, F_, C_, R_, S_),
+    (C_, M_, N_, R_, S_, E_, F_),
+    (E_, F_, N_, M_, C_, R_, S_),
+    (N_, M_, E_, C_, R_, S_, F_),   # row-stationary-like (S/F inner)
+    (M_, E_, N_, C_, R_, F_, S_),
+)
+
+
+def _divisors(x: int) -> List[int]:
+    out = []
+    i = 1
+    while i * i <= x:
+        if x % i == 0:
+            out.append(i)
+            if i != x // i:
+                out.append(x // i)
+        i += 1
+    return sorted(out)
+
+
+def ordered_factorizations(bound: int, levels: int) -> List[Tuple[int, ...]]:
+    """All tuples (f_0..f_{levels-1}) with product == bound."""
+    if levels == 1:
+        return [(bound,)]
+    out = []
+    for d in _divisors(bound):
+        for rest in ordered_factorizations(bound // d, levels - 1):
+            out.append((d,) + rest)
+    return out
+
+
+@dataclasses.dataclass
+class MapperConfig:
+    max_mappings: int = 20000          # sampling budget for the mapspace
+    orders: str = "representative"     # representative | exhaustive | random
+    n_random_orders: int = 0
+    enable_bypass: bool = True
+    seed: int = 0
+    # fraction of samples whose spatial factors are drawn greedily to fill
+    # the fan-out (uniform divisor sampling almost never reaches high PE
+    # counts on 7-dim bounds — this is how large mapspaces stay searchable)
+    spatial_bias: float = 0.7
+    # utilization-constraint pruner (paper §5.2)
+    pe_utilization_min: float = 0.0
+    innermem_utilization_min: float = 0.0
+    # inter-layer activation words reserved at this level during validation
+    act_reserve: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Mapspace:
+    workload: Workload
+    hardware: HardwareDesc
+    mappings: List[Mapping]
+    total_candidates: int              # before sampling/validation
+    n_valid: int                       # after validation, before pruning
+
+
+def _order_set(cfg: MapperConfig, rng: random.Random):
+    if cfg.orders == "exhaustive":
+        return [tuple(p) for p in itertools.permutations(range(7))]
+    orders = list(REPRESENTATIVE_ORDERS)
+    for _ in range(cfg.n_random_orders):
+        p = list(range(7))
+        rng.shuffle(p)
+        orders.append(tuple(p))
+    return orders
+
+
+def _bypass_choices(hw: HardwareDesc, cfg: MapperConfig):
+    """Per memory level: frozensets of bypassed tensors.  DRAM (level 0)
+    never bypasses; at most one intermediate level bypasses a given tensor
+    combination (keeps the space sane)."""
+    per_level = []
+    for li in range(len(hw.tiling_levels)):
+        lv = hw.tiling_levels[li]
+        if lv.kind != "memory" or li == 0 or not cfg.enable_bypass:
+            per_level.append([frozenset()])
+        else:
+            per_level.append([frozenset(), frozenset({"input"}),
+                              frozenset({"weight"}), frozenset({"output"})])
+    return per_level
+
+
+def validate(mapping: Mapping, act_reserve: Optional[Dict[str, float]] = None
+             ) -> bool:
+    """Paper §5: hardware resource utilization needed <= provided."""
+    hw = mapping.hardware
+    # spatial fan-out
+    for li, lv in enumerate(hw.tiling_levels):
+        f = math.prod(mapping.factors[li])
+        if lv.kind == "routing":
+            if f > lv.fanout:
+                return False
+        elif lv.kind == "memory":
+            pass
+    # buffer capacities (+ reserved activation words, paper §5 validator)
+    for li in hw.memory_level_indices():
+        lv = hw.tiling_levels[li]
+        if lv.size_words is None:
+            continue
+        reserve = (act_reserve or {}).get(lv.name, 0.0)
+        if lv.usage == "split" and lv.split_sizes is not None:
+            for ti, t in enumerate(TENSORS):
+                if mapping.buffer_words(li, t) > lv.split_sizes[ti]:
+                    return False
+        else:
+            used = sum(mapping.buffer_words(li, t) for t in TENSORS)
+            if used + reserve > lv.size_words:
+                return False
+    # a tensor must be staged somewhere on chip if any loop splits it...
+    # (DRAM always stages everything, so chains are always well-formed.)
+    return True
+
+
+def prune(mappings: Sequence[Mapping], cfg: MapperConfig) -> List[Mapping]:
+    """Utilization-constraint pruner (paper §5.2)."""
+    out = []
+    for m in mappings:
+        if cfg.pe_utilization_min > 0.0:
+            if m.spatial_used() < cfg.pe_utilization_min * \
+                    m.hardware.total_pes():
+                continue
+        if cfg.innermem_utilization_min > 0.0:
+            li = m.hardware.memory_level_indices()[-1]
+            lv = m.hardware.tiling_levels[li]
+            if lv.size_words:
+                used = sum(m.buffer_words(li, t) for t in TENSORS)
+                if used < cfg.innermem_utilization_min * lv.size_words:
+                    continue
+        out.append(m)
+    return out
+
+
+def build_mapspace(workload: Workload, hw: HardwareDesc,
+                   cfg: Optional[MapperConfig] = None) -> Mapspace:
+    """Mapping constructor + validator + pruner (paper Fig. 5)."""
+    cfg = cfg or MapperConfig()
+    rng = random.Random(cfg.seed)
+    nl = len(hw.tiling_levels)
+    mem_idx = set(hw.memory_level_indices())
+    rout_idx = set(hw.routing_level_indices())
+
+    # Factor options per dim: tuples over tiling levels.  Spatial levels only
+    # receive factors for dims (spatial partitioning applies to any dim);
+    # compute level receives none (factors implicitly 1).
+    per_dim: List[List[Tuple[int, ...]]] = []
+    for d in range(7):
+        opts = ordered_factorizations(workload.dims[d], nl)
+        # prune spatial over-subscription early
+        keep = []
+        for t in opts:
+            ok = True
+            for li in rout_idx:
+                if t[li] > hw.tiling_levels[li].fanout:
+                    ok = False
+                    break
+            if ok:
+                keep.append(t)
+        per_dim.append(keep)
+
+    orders = _order_set(cfg, rng)
+    bypass_choices = _bypass_choices(hw, cfg)
+    n_mem = len(mem_idx)
+    total = math.prod(len(o) for o in per_dim) * (len(orders) ** n_mem) \
+        * math.prod(len(b) for b in bypass_choices)
+
+    # index per-dim factor tuples by their spatial component at the first
+    # routing level (greedy fan-out sampling looks options up by it)
+    first_rout = min(rout_idx) if rout_idx else None
+    by_spatial: List[Dict[int, List[Tuple[int, ...]]]] = []
+    for d in range(7):
+        idx: Dict[int, List[Tuple[int, ...]]] = {}
+        for t in per_dim[d]:
+            s = t[first_rout] if first_rout is not None else 1
+            idx.setdefault(s, []).append(t)
+        by_spatial.append(idx)
+
+    def greedy_spatial():
+        """Per-dim spatial factors at the first routing level, greedily
+        filling the fan-out in random dim order."""
+        budget = hw.tiling_levels[first_rout].fanout
+        chosen = [1] * 7
+        dims = list(range(7))
+        rng.shuffle(dims)
+        for d in dims:
+            opts = [s for s in by_spatial[d] if s <= budget]
+            if not opts:
+                continue
+            opts.sort()
+            # bias towards the largest usable divisor
+            pick = opts[-1] if rng.random() < 0.7 else \
+                opts[rng.randrange(len(opts))]
+            chosen[d] = pick
+            budget //= pick
+            if budget <= 1:
+                break
+        return chosen
+
+    def sample_one():
+        if first_rout is not None and rng.random() < cfg.spatial_bias:
+            sp = greedy_spatial()
+            fac = []
+            for d in range(7):
+                lst = by_spatial[d].get(sp[d]) or per_dim[d]
+                fac.append(lst[rng.randrange(len(lst))])
+        else:
+            fac = [per_dim[d][rng.randrange(len(per_dim[d]))]
+                   for d in range(7)]
+        factors = tuple(tuple(fac[d][li] for d in range(7))
+                        for li in range(nl))
+        ords = tuple(
+            (orders[rng.randrange(len(orders))] if li in mem_idx else None)
+            for li in range(nl))
+        byp = tuple(bypass_choices[li][rng.randrange(len(bypass_choices[li]))]
+                    for li in range(nl))
+        return factors, ords, byp
+
+    seen = set()
+    candidates: List[Mapping] = []
+    if total <= cfg.max_mappings:
+        dim_iter = itertools.product(*per_dim)
+        order_sets = [orders if li in mem_idx else [None]
+                      for li in range(nl)]
+        for fac in dim_iter:
+            factors = tuple(tuple(fac[d][li] for d in range(7))
+                            for li in range(nl))
+            for ords in itertools.product(*order_sets):
+                for byp in itertools.product(*bypass_choices):
+                    candidates.append(Mapping(workload, hw, factors,
+                                              tuple(ords), tuple(byp)))
+    else:
+        tries = 0
+        while len(candidates) < cfg.max_mappings and tries < 20 * cfg.max_mappings:
+            tries += 1
+            factors, ords, byp = sample_one()
+            key = (factors, ords, byp)
+            if key in seen:
+                continue
+            seen.add(key)
+            candidates.append(Mapping(workload, hw, factors, ords, byp))
+
+    valid = [m for m in candidates if validate(m, cfg.act_reserve)]
+    n_valid = len(valid)
+    pruned = prune(valid, cfg)
+    # If pruning removed everything (paper keeps constraints optional), fall
+    # back to the valid space so the explorer still finds a mapping.
+    mappings = pruned if pruned else valid
+    return Mapspace(workload=workload, hardware=hw, mappings=mappings,
+                    total_candidates=total, n_valid=n_valid)

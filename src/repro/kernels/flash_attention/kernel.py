@@ -1,0 +1,103 @@
+"""FlashAttention (fwd) as a Pallas TPU kernel.
+
+TPU-native tiling (not a CUDA port): the grid is (batch*head, q-block,
+k-block) with the k axis innermost ("arbitrary" semantics — sequential on
+TPU), streaming K/V blocks through VMEM while the online-softmax running
+max / denominator / accumulator live in VMEM scratch.  Block shapes default
+to 128 x head_dim — aligned to the MXU's 128-lane systolic dimension.
+Causal masking skips fully-masked K blocks (upper-triangle blocks do no
+MXU work).
+
+GQA: callers pass K/V already expanded to matched heads (the ops wrapper
+indexes kv_head = q_head // group, which XLA turns into a broadcast, not a
+copy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool,
+                  sm_scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def body():
+        q = q_ref[0, :, :].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, :, :].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, :, :].astype(jnp.float32)          # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                # [bq, bk]
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]                             # [bq, 1]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)                          # [bq, bk]
+        alpha = jnp.exp(m_prev - m_cur)                 # [bq, 1]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    if causal:
+        pl.when(k_start <= q_start + block_q - 1)(body)
+    else:
+        body()
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                        causal: bool = True, interpret: bool = False):
+    """q/k/v: [BH, S, D] (matched heads) -> [BH, S, D]."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    grid = (bh, s // block_q, s // block_k)
+    kern = functools.partial(_flash_kernel, block_q=block_q,
+                             block_k=block_k, causal=causal,
+                             sm_scale=d ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # denominator
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Jit'd public wrapper: [B,S,H,D] GQA layout -> kernel layout -> back.
+
+On CPU (this container) interpret=True executes the kernel body in Python
+for correctness validation; on TPU the same call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [B,S,H,D]; k/v: [B,S,Hkv,D] -> [B,S,H,D]."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    # expand kv heads (broadcast view, no copy under XLA)
+    k_e = jnp.repeat(k, group, axis=2)
+    v_e = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k_e.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v_e.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    of = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    return of.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def install(interpret: bool = True):
+    """Register as the model's fused attention impl (models/attention.py)."""
+    from ...models.attention import set_flash_impl
+
+    def impl(q, k, v):
+        return flash_attention(q, k, v, causal=True, interpret=interpret)
+
+    set_flash_impl(impl)

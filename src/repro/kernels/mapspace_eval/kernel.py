@@ -1,0 +1,164 @@
+"""TRIM mapspace scoring as a Pallas TPU kernel — the paper's hot loop.
+
+A mapspace is a batch of mappings; scoring one mapping is ~1k scalar ops
+(innermost-relevant-loop scans, masked products, traffic/energy sums), so a
+Timeloop-style Python loop is interpreter-bound.  Here a block of mappings
+is laid out as [BLOCK, SLOTS] rows in VMEM and the whole scoring pipeline
+is VPU vector arithmetic (the slot axis padded towards the 128-lane
+register width; chain levels statically unrolled).
+
+Semantics: identical to core.batch_eval restricted to no-bypass mappings
+(storage chain = all memory levels) — including input halo credit, psum
+read-modify-write, NoC classification, and zero-skip energy discounts.
+The ops wrapper precomputes per mapping (cheap jnp):
+
+  bounds/cum [B,S]     slot loop bounds (nest order) and their cumprod
+  rel_{i,w,o} [B,S]    relevance masks per tensor
+  tw_u/tw_p [B,L1,3]   union / per-instance tile words per chain pair
+  fresh [B,L1,S]       input fresh-words if the innermost relevant slot is
+                       this slot (== tw_u for non-sliding dims => the
+                       sliding formula is uniform)
+  ia/ib [B,L1]         parent/child used-instance counts per pair
+  noc_e [B,L1,3]       NoC pJ/word per pair per tensor (0 if no crossing)
+  noc_m [B,L1]         1 if the pair crosses a routing level
+
+and bakes static floats (bandwidths, energies, zero-skip factors, MAC
+costs) via functools.partial.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
+                  tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
+                  noc_e_ref, noc_m_ref,
+                  cycles_ref, energy_ref, *,
+                  vis: Tuple[int, ...],
+                  mem_bw: Tuple[float, ...],
+                  e_read: Tuple[float, ...], e_write: Tuple[float, ...],
+                  zs_parent: Tuple[int, ...],
+                  zf: Tuple[float, float, float],
+                  macs: float, macs_per_pe: float, pipeline: float,
+                  mac_energy: float, eff_macs: float, leak_rate: float,
+                  noc_bw: float, n_mem: int):
+    bounds = bounds_ref[...]                    # [Bm, S]
+    cum = cum_ref[...]
+    rel = {0: rel_i_ref[...], 1: rel_w_ref[...], 2: rel_o_ref[...]}
+    bm = bounds.shape[0]
+    pos = jax.lax.broadcasted_iota(jnp.float32, bounds.shape, 1) + 1.0
+    active = jnp.where(bounds > 1.0, 1.0, 0.0)
+
+    reads = [jnp.zeros((bm,), jnp.float32) for _ in range(n_mem)]
+    writes = [jnp.zeros((bm,), jnp.float32) for _ in range(n_mem)]
+    raw = [jnp.zeros((bm,), jnp.float32) for _ in range(n_mem)]
+    noc_words = jnp.zeros((bm,), jnp.float32)
+    dyn = jnp.full((bm,), eff_macs * mac_energy, jnp.float32)
+
+    L1 = len(vis)
+    for j in range(L1):
+        v = float(vis[j])
+        i_a = ia_ref[:, j]
+        i_b = ib_ref[:, j]
+        nm = noc_m_ref[:, j]
+        visible = jnp.where(pos <= v, 1.0, 0.0)
+        is_term = j == L1 - 1
+        for t in range(3):
+            tw_u = tw_u_ref[:, j, t]
+            tw_p = tw_p_ref[:, j, t]
+            r = visible * rel[t] * active
+            k1 = jnp.max(r * pos, axis=1)                    # [Bm] 1-based
+            has = k1 > 0.5
+            oh = jnp.where(pos == jnp.maximum(k1, 1.0)[:, None], 1.0, 0.0)
+            p_k = jnp.where(has, jnp.sum(cum * oh, axis=1), 1.0)
+            b_k = jnp.where(has, jnp.sum(bounds * oh, axis=1), 1.0)
+            vv = p_k
+            outer = p_k / b_k
+            zsf = zf[t] if zs_parent[j] else 1.0
+            ne = noc_e_ref[:, j, t]
+            if t == 2:                                        # output
+                relk = jnp.where((r * jnp.where(pos <= k1[:, None], 1.0,
+                                                0.0)) > 0, bounds, 1.0)
+                dd = jnp.where(has, jnp.prod(relk, axis=1), 1.0)
+                p_rd = i_a * (vv - dd) * tw_u
+                p_wr = i_a * vv * tw_u
+                reads[j] += p_rd * zsf
+                writes[j] += p_wr * zsf
+                raw[j] += p_rd + p_wr
+                if not is_term:
+                    c_rd = i_b * vv * tw_p
+                    c_wr = i_b * (vv - dd) * tw_p
+                    reads[j + 1] += c_rd * zsf
+                    writes[j + 1] += c_wr * zsf
+                    raw[j + 1] += c_rd + c_wr
+                nw = i_b * (2 * vv - dd) * tw_p * nm
+                noc_words += nw
+                dyn += nw * zsf * ne
+            else:
+                if t == 0:                                    # input: halo
+                    fr = jnp.sum(fresh_ref[:, j, :] * oh, axis=1)
+                    words = outer * (tw_u + (b_k - 1.0) * fr)
+                    words = jnp.where(has, words, tw_u)
+                else:
+                    words = jnp.where(has, vv * tw_u, tw_u)
+                p_rd = i_a * words
+                reads[j] += p_rd * zsf
+                raw[j] += p_rd
+                if not is_term:
+                    c_wr = i_b * vv * tw_p
+                    writes[j + 1] += c_wr * zsf
+                    raw[j + 1] += c_wr
+                nw = p_rd * nm
+                noc_words += nw
+                dyn += nw * zsf * ne
+
+    pes = ib_ref[:, L1 - 1]                     # instances at compute leaf
+    cycles = macs / (jnp.maximum(pes, 1.0) * macs_per_pe * pipeline)
+    for m in range(n_mem):
+        inst_m = ia_ref[:, m]                   # parent of pair m = level m
+        cycles = jnp.maximum(cycles, raw[m] / (mem_bw[m] * inst_m))
+        dyn += reads[m] * e_read[m] + writes[m] * e_write[m]
+    cycles = jnp.maximum(cycles, noc_words / noc_bw)
+    energy = dyn + leak_rate * cycles
+    cycles_ref[...] = cycles
+    energy_ref[...] = energy
+
+
+def mapspace_eval_fwd(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
+                      ia, ib, noc_e, noc_m, *, static: dict,
+                      block: int = 256, interpret: bool = False):
+    """All array args: leading mapping axis B (multiple of `block`).
+    Returns (cycles [B], energy [B])."""
+    b, s = bounds.shape
+    l1 = tw_u.shape[1]
+    assert b % block == 0, (b, block)
+    grid = (b // block,)
+    kern = functools.partial(_score_kernel, **static)
+    row = lambda i: (i, 0)
+    row3 = lambda i: (i, 0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, s), row), pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, s), row), pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1, s), row3),
+            pl.BlockSpec((block, l1), row), pl.BlockSpec((block, l1), row),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1), row),
+        ],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32),
+                   jax.ShapeDtypeStruct((b,), jnp.float32)],
+        interpret=interpret,
+    )(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh, ia, ib,
+      noc_e, noc_m)

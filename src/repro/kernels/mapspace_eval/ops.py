@@ -1,0 +1,169 @@
+"""Jit'd wrapper: Mapping objects -> kernel arrays -> (cycles, energy).
+
+Precomputes the per-mapping tensors described in kernel.py (cheap jnp) and
+bakes hardware constants statically.  Only no-bypass mappings are accepted
+(the kernel's storage chains are the full memory hierarchy); the general
+path is core.batch_eval.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.batch_eval import (RELEVANT, SLIDING, HwStatic, make_static,
+                                pack)
+from ...core.mapping import Mapping
+from ...core.workload import N_, M_, C_, R_, S_, E_, F_
+from .kernel import mapspace_eval_fwd
+
+
+def _tile_words_np(st: HwStatic, tile):
+    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
+    u, v = st.stride
+    dr, ds = st.dilation
+    p = (e - 1) * u + (r - 1) * dr + 1
+    q = (f - 1) * v + (s - 1) * ds + 1
+    w = (r * s * c * m) if st.has_weight else np.zeros_like(n)
+    o = n * e * f * (c if st.depthwise else m)
+    return np.stack([n * c * p * q, w, o], axis=-1)      # [..., 3]
+
+
+def _fresh_np(st: HwStatic, tile, d):
+    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
+    u, v = st.stride
+    dr, ds = st.dilation
+    p = (e - 1) * u + (r - 1) * dr + 1
+    q = (f - 1) * v + (s - 1) * ds + 1
+    if d == E_:
+        return n * c * np.minimum(p, e * u) * q
+    if d == F_:
+        return n * c * p * np.minimum(q, f * v)
+    if d == R_:
+        return n * c * np.minimum(p, r * dr) * q
+    return n * c * p * np.minimum(q, s * ds)
+
+
+def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
+    hw = mappings[0].hardware
+    wl = mappings[0].workload
+    for m in mappings:
+        assert all(not b for b in m.bypass), "kernel path is no-bypass only"
+    st = make_static(hw, wl)
+    factors, rank, _ = pack(mappings)
+    factors = np.asarray(factors, np.float32)
+    rank = np.asarray(rank)
+    B, L, _ = factors.shape
+    mem = list(st.mem_idx)
+    rout = list(st.rout_idx)
+    Lm = len(mem)
+    S = Lm * 7
+
+    tile_at = np.flip(np.cumprod(np.flip(factors, 1), axis=1), 1)
+    tile_at = np.concatenate([tile_at, np.ones((B, 1, 7), np.float32)], 1)
+
+    slot_bound = np.ones((B, S), np.float32)
+    slot_dim = np.zeros((B, S), np.int64)
+    for j, li in enumerate(mem):
+        for d in range(7):
+            idx = j * 7 + rank[:, li, d]
+            slot_bound[np.arange(B), idx] = factors[:, li, d]
+            slot_dim[np.arange(B), idx] = d
+    cum = np.cumprod(slot_bound, axis=1)
+
+    rel_i = RELEVANT["input"][slot_dim].astype(np.float32)
+    rel_w = RELEVANT["weight"][slot_dim].astype(np.float32)
+    rel_out = RELEVANT["output"].copy()
+    if st.depthwise:
+        rel_out = np.array([1, 1, 1, 0, 0, 1, 1], bool)
+    rel_o = rel_out[slot_dim].astype(np.float32)
+
+    def inst_before(tiling_idx):
+        inst = np.ones((B,), np.float32)
+        for r in rout:
+            if r < tiling_idx:
+                inst *= np.prod(factors[:, r, :], axis=1)
+        return inst
+
+    L1 = Lm  # children: mem[1..Lm-1] + compute
+    tw_u = np.zeros((B, L1, 3), np.float32)
+    tw_p = np.zeros((B, L1, 3), np.float32)
+    fresh = np.zeros((B, L1, S), np.float32)
+    ia = np.zeros((B, L1), np.float32)
+    ib = np.zeros((B, L1), np.float32)
+    noc_e = np.zeros((B, L1, 3), np.float32)
+    noc_m = np.zeros((B, L1), np.float32)
+    zs_parent = []
+    for jj in range(L1):
+        parent_t = mem[jj]
+        child_t = mem[jj + 1] if jj + 1 < Lm else st.n_levels
+        per = tile_at[:, child_t] if jj + 1 < Lm else \
+            np.ones((B, 7), np.float32)
+        Sb = np.ones((B, 7), np.float32)
+        crossed = [r for r in rout if parent_t < r < child_t]
+        for r in crossed:
+            Sb *= factors[:, r, :]
+        union = per * Sb
+        tw_p[:, jj] = _tile_words_np(st, per)
+        tw_u[:, jj] = _tile_words_np(st, union)
+        ia[:, jj] = inst_before(parent_t)
+        ib[:, jj] = inst_before(child_t)
+        zs_parent.append(int(st.zs_boundary >= 0
+                             and parent_t >= st.zs_boundary))
+        for d in range(7):
+            if SLIDING[d]:
+                fr = _fresh_np(st, union, d)
+            else:
+                fr = tw_u[:, jj, 0]
+            fresh[:, jj, :][slot_dim == d] = np.broadcast_to(
+                fr[:, None], (B, S))[slot_dim == d]
+        if crossed:
+            noc_m[:, jj] = 1.0
+            for ri, r in enumerate(rout):
+                if r not in crossed:
+                    continue
+                sp = factors[:, r, :]
+                m_w = (sp[:, [N_, E_, F_]] > 1).any(1)
+                m_i = sp[:, M_] > 1
+                a_o = (sp[:, [C_, R_, S_]] > 1).any(1)
+                k = rout.index(r)
+                noc_e[:, jj, 0] += np.where(m_i, st.multi_e[k], st.uni_e[k])
+                noc_e[:, jj, 1] += np.where(m_w, st.multi_e[k], st.uni_e[k])
+                noc_e[:, jj, 2] += np.where(a_o, st.acc_e[k], st.uni_e[k])
+
+    macs = float(math.prod(st.dims))
+    nz = (1.0 - st.in_zf) * (1.0 - (st.w_zf if st.has_weight else 0.0))
+    eff = macs * nz if st.zs_boundary >= 0 else macs
+    zf = (1.0 - st.in_zf,
+          1.0 - (st.w_zf if st.has_weight else 0.0), 1.0)
+    static = dict(
+        vis=tuple((jj + 1) * 7 for jj in range(L1)),
+        mem_bw=tuple(st.bandwidths), e_read=tuple(st.read_e),
+        e_write=tuple(st.write_e), zs_parent=tuple(zs_parent), zf=zf,
+        macs=macs, macs_per_pe=float(st.macs_per_pe),
+        pipeline=float(st.pipeline), mac_energy=float(st.mac_e),
+        eff_macs=eff,
+        leak_rate=float(sum(st.leak) + st.pe_leak * st.num_pes),
+        noc_bw=float(st.noc_bw[0]) if st.noc_bw else 1e30, n_mem=Lm)
+
+    # pad mapping axis to a block multiple
+    pad = (-B) % block
+    def padv(a):
+        return np.concatenate([a, np.repeat(a[:1], pad, 0)], 0) if pad \
+            else a
+    arrays = [slot_bound, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
+              ia, ib, noc_e, noc_m]
+    arrays = [jnp.asarray(padv(a)) for a in arrays]
+    return arrays, static, B
+
+
+def mapspace_eval(mappings: Sequence[Mapping], *, block: int = 256,
+                  interpret: bool = False):
+    """-> (cycles [n], energy [n]) float32 arrays."""
+    arrays, static, n = pack_for_kernel(mappings, block)
+    cycles, energy = mapspace_eval_fwd(*arrays, static=static, block=block,
+                                       interpret=interpret)
+    return np.asarray(cycles[:n]), np.asarray(energy[:n])

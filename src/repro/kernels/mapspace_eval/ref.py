@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the mapspace-eval kernel: core.batch_eval restricted
+to no-bypass mappings (the kernel's semantics are defined as equal to
+this — and batch_eval itself is validated against the scalar evaluator and
+the brute-force loop simulator)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from ...core.batch_eval import evaluate_batch, make_static, pack
+from ...core.mapping import Mapping
+
+
+def mapspace_eval_ref(mappings: Sequence[Mapping]):
+    """-> (cycles [n], energy [n]) float64/float32 arrays."""
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, rank, store = pack(mappings)
+    out = evaluate_batch(st, factors, rank, store)
+    return np.asarray(out["cycles"]), np.asarray(out["energy_pj"])

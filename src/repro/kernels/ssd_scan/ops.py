@@ -1,0 +1,28 @@
+"""Jit'd wrapper: model layout [B,T,H,P] + per-head A -> kernel layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, a, bh, ch, *, chunk: int = 128,
+             interpret: bool = False):
+    """xh: [B,T,H,P]; dt: [B,T,H]; a: [H]; bh/ch: [B,T,G,N] -> [B,T,H,P]."""
+    b, t, h, p = xh.shape
+    g, n = bh.shape[2], bh.shape[3]
+    rep = h // g
+    b_e = jnp.repeat(bh, rep, axis=2)              # [B,T,H,N]
+    c_e = jnp.repeat(ch, rep, axis=2)
+    da = dt * a[None, None, :]                     # [B,T,H]
+
+    def flat(v):  # [B,T,H,X] -> [B*H, T, X]
+        return v.transpose(0, 2, 1, 3).reshape(b * h, t, -1)
+
+    y = ssd_scan_fwd(flat(xh), flat(dt[..., None]), flat(da[..., None]),
+                     flat(b_e), flat(c_e), chunk=chunk, interpret=interpret)
+    return y.reshape(b, h, t, p).transpose(0, 2, 1, 3)

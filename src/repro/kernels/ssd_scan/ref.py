@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel (flattened [BH, T, ...]
+layout, matched groups)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.ssm import segsum
+
+
+def ssd_scan_ref(x, dt, da, b, c):
+    """Quadratic attention-form SSD.  x: [BH,T,P]; dt/da: [BH,T,1];
+    b/c: [BH,T,N] -> [BH,T,P]."""
+    da_ = da[..., 0]                              # [BH, T]
+    l_mat = jnp.exp(segsum(da_))                  # [BH, T, T]
+    l_mat = jnp.where(jnp.isfinite(l_mat), l_mat, 0.0)
+    scores = jnp.einsum("bqn,bkn->bqk", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    w = scores * l_mat * dt[..., 0][:, None, :]
+    return jnp.einsum("bqk,bkp->bqp", w,
+                      x.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (device count locks on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh; record memory analysis, cost analysis, and the collective
+schedule for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config, is_skipped
+from ..parallel.sharding import make_rules
+from ..train.optimizer import OptConfig
+from ..train.train_step import TrainConfig
+from . import roofline as rl
+from .mesh import make_production_mesh
+from .steps import build_decode_step, build_prefill_step, build_train_step
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             sharding_mode: str = "baseline", remat: str = "dots_no_batch",
+             mla_absorb: bool = False, seq_shard: Optional[bool] = None,
+             fsdp: bool = True, grad_compression: bool = False,
+             microbatches: int = 0, collect_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if is_skipped(cfg, shape):
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": ("full-attention arch: long_500k requires "
+                            "sub-quadratic attention (DESIGN.md §5)")}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    if seq_shard is None:
+        seq_shard = spec.global_batch < 8     # SP for tiny-batch long ctx
+    if microbatches == 0:
+        # production default at this scale: 4-way gradient accumulation
+        # for training shapes (bounds live activations), none elsewhere
+        microbatches = 4 if spec.kind == "train" else 1
+    overrides = {}
+    if sharding_mode == "trim":
+        from ..core.tpu_adapter import trim_sharding_overrides
+        overrides = trim_sharding_overrides(cfg, spec, mesh)
+    rules = make_rules(mesh, fsdp=fsdp, seq_shard=seq_shard,
+                       overrides=overrides)
+
+    t0 = time.time()
+    with mesh:
+        if spec.kind == "train":
+            jit_fn, (state_shapes, in_specs), _ = build_train_step(
+                cfg, mesh, rules, spec,
+                opt_cfg=OptConfig(),
+                tc=TrainConfig(remat=remat,
+                               grad_compression=grad_compression,
+                               microbatches=microbatches))
+            lowered = jit_fn.lower(state_shapes, in_specs)
+        elif spec.kind == "prefill":
+            jit_fn, (p_shapes, in_specs), _ = build_prefill_step(
+                cfg, mesh, rules, spec, remat="none")
+            lowered = jit_fn.lower(p_shapes, in_specs)
+        else:
+            jit_fn, (p_shapes, cache_shapes, tok, pos), _ = \
+                build_decode_step(cfg, mesh, rules, spec,
+                                  mla_absorb=mla_absorb)
+            lowered = jit_fn.lower(p_shapes, cache_shapes, tok, pos)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo, n_dev)
+    # XLA's cost_analysis counts while bodies once; the trip-weighted HLO
+    # parse (validated in tests/test_roofline_parse.py) is authoritative
+    # for scanned programs — the raw numbers stay as a cross-check.
+    parsed = rl.parse_hlo_costs(hlo)
+    flops = float(parsed["flops"])
+    byts = float(parsed["bytes"])
+    model_flops = rl.model_flops_estimate(cfg, spec)
+    roof = rl.make_roofline(flops_per_device=flops, bytes_per_device=byts,
+                            collective_bytes=coll.total_transfer,
+                            model_flops=model_flops, n_devices=n_dev)
+    out = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev,
+        "sharding": sharding_mode,
+        "remat": remat,
+        "options": {"mla_absorb": mla_absorb, "seq_shard": seq_shard,
+                    "fsdp": fsdp, "grad_compression": grad_compression,
+                    "microbatches": microbatches},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": byts,
+                 "xla_reported_flops": float(cost.get("flops", 0.0)),
+                 "xla_reported_bytes": float(cost.get("bytes accessed",
+                                                      0.0))},
+        "collectives": {"counts": coll.counts,
+                        "result_bytes": coll.result_bytes,
+                        "transfer_bytes_per_device": coll.total_transfer},
+        "roofline": roof.as_dict(),
+    }
+    if collect_hlo:
+        out["hlo_lines"] = len(hlo.splitlines())
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--sharding", choices=["baseline", "trim"],
+                    default="baseline")
+    ap.add_argument("--remat", default="dots_no_batch")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    res = run_cell(arch, shape, multi_pod=mp,
+                                   sharding_mode=args.sharding,
+                                   remat=args.remat,
+                                   mla_absorb=args.mla_absorb,
+                                   grad_compression=args.grad_compression,
+                                   microbatches=args.microbatches)
+                    status = "SKIP" if "skipped" in res else "OK"
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    status = "FAIL"
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                extra = ""
+                if status == "OK":
+                    r = res["roofline"]
+                    extra = (f"compile={res['compile_s']:.0f}s "
+                             f"bottleneck={r['bottleneck']} "
+                             f"frac={r['roofline_fraction']:.3f}")
+                print(f"[{status}] {tag} {extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

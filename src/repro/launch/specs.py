@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run: weak-type
+correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeSpec
+from ..models.model import cache_specs, init_cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> Dict[str, Any]:
+    """Inputs for train/prefill step of one (arch x shape) cell."""
+    b, s = spec.global_batch, spec.seq_len
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    if cfg.family == "vlm":
+        return {"embeds": _sds((b, s, cfg.d_model), cdt),
+                "positions3": _sds((3, b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds((b, s, cfg.d_model), cdt),
+                "tokens": _sds((b, s), jnp.int32)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, spec: ShapeSpec):
+    """(cache, token, pos) specs for the serve step (KV cache of seq_len)."""
+    b, s = spec.global_batch, spec.seq_len
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    token = _sds((b,), jnp.int32)
+    return cache_shape, token
+
+
+def batch_logical_specs(cfg: ModelConfig) -> Dict[str, tuple]:
+    """Logical axes for each input-batch leaf."""
+    if cfg.family == "vlm":
+        return {"embeds": ("batch", "seq", "embed"),
+                "positions3": (None, "batch", "seq"),
+                "labels": ("batch", "seq")}
+    if cfg.family == "encdec":
+        return {"frames": ("batch", "seq", "embed"),
+                "tokens": ("batch", "seq")}
+    return {"tokens": ("batch", "seq")}

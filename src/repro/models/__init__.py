@@ -1,0 +1,5 @@
+from .model import (decode_step, forward, init_cache, init_model, lm_loss,
+                    REMAT_POLICIES)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model", "lm_loss",
+           "REMAT_POLICIES"]

@@ -1,0 +1,337 @@
+"""Attention: GQA (grouped KV), MLA (latent-compressed KV), cross-attention.
+
+Forward paths:
+  * train/prefill: full-sequence causal (or bidirectional / sliding-window)
+  * decode: single new token against a KV cache
+
+MLA decode caches the compressed latent (kv_lora) + rope key only — the
+paper-faithful memory win of DeepSeek-V2.  The weight-absorbed decode
+(`absorb=True`) folds W_UK into the query and W_UV into the output
+projection so per-step FLOPs scale with the latent rank, not n_heads*d_head
+x seq — that is one of our §Perf iterations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamBuilder, apply_mrope, apply_rope, shard
+
+# Hook: launch layer may install a fused flash-attention implementation
+# (repro.kernels.flash_attention) for the full-sequence path.
+_FLASH_IMPL = None
+
+# Pure-XLA blocked attention kicks in above this many KV positions: online
+# softmax over K/V blocks (lax.scan) keeps the S x S score matrix out of
+# HBM — the compile-anywhere analogue of the Pallas flash kernel, and what
+# the dry-run lowers for the 32k shapes.  Set to 0 to force it everywhere
+# (tests), or a huge value to disable (perf ablations).
+BLOCKED_ATTN_THRESHOLD = 4096
+BLOCKED_ATTN_KBLOCK = 1024
+
+
+def set_flash_impl(fn):
+    global _FLASH_IMPL
+    _FLASH_IMPL = fn
+
+
+def set_blocked_threshold(n: int):
+    global BLOCKED_ATTN_THRESHOLD
+    BLOCKED_ATTN_THRESHOLD = n
+
+
+def sdpa_blocked(q, k, v, *, causal=True, window=0,
+                 k_block: int = None):
+    """Online-softmax attention over K/V blocks (flash pattern in pure
+    lax.scan — no S x S materialization).  q: [B,Sq,H,D] matched to k/v
+    [B,Sk,Hkv,D] by GQA grouping.  fp32 accumulation."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    kb = k_block or BLOCKED_ATTN_KBLOCK
+    kb = min(kb, sk)
+    assert sk % kb == 0, (sk, kb)
+    nkb = sk // kb
+    group = h // hkv
+    qf = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    scale = d ** -0.5
+    kr = k.reshape(b, nkb, kb, hkv, d).astype(jnp.float32)
+    vr = v.reshape(b, nkb, kb, hkv, dv).astype(jnp.float32)
+    qi = jnp.arange(sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb_i, vb_i, blk = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb_i) * scale
+        kj = blk * kb + jnp.arange(kb)
+        ok = jnp.ones((sq, kb), bool)
+        if causal:
+            ok &= kj[None, :] <= qi[:, None]
+        if window:
+            ok &= kj[None, :] > qi[:, None] - window
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                                  vb_i)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0),
+         jnp.arange(nkb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def _mask_bias(q_len, kv_len, causal, window, q_offset=0, dtype=jnp.float32):
+    if not causal and window == 0:
+        return None
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((q_len, kv_len), bool)
+    if causal:
+        ok &= kj <= qi
+    if window:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def sdpa(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q/k: [B,S,H*,Dqk], v: [B,Sk,Hkv,Dv] -> [B,Sq,H,Dv].  fp32 softmax.
+    Dv may differ from Dqk (MLA)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    if _FLASH_IMPL is not None and causal and window == 0 \
+            and sq == k.shape[1] and d == dv:
+        return _FLASH_IMPL(q, k, v)
+    if k.shape[1] >= BLOCKED_ATTN_THRESHOLD and q_offset == 0 \
+            and sq == k.shape[1]:
+        return sdpa_blocked(q, k, v, causal=causal, window=window)
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    bias = _mask_bias(sq, k.shape[1], causal, window, q_offset)
+    if bias is not None:
+        logits = logits + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+def init_gqa(pb: ParamBuilder, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.d_head
+    pb.dense("wq", (d, cfg.n_heads, hd), ("embed", "heads", "head_dim"))
+    pb.dense("wk", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"))
+    pb.dense("wv", (d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"))
+    pb.dense("wo", (cfg.n_heads, hd, d), ("heads", "head_dim", "embed"))
+
+
+def _rope_qk(cfg: ModelConfig, q, k, positions):
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    return q, k
+
+
+def gqa_forward(p, cfg: ModelConfig, x, positions, *, causal=True,
+                window: int = 0):
+    """Full-sequence attention.  x: [B,S,D]."""
+    q = shard(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+              "batch", None, "heads", None)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q, k = _rope_qk(cfg, q, k, positions)
+    out = sdpa(q, k, v, causal=causal, window=window)
+    return shard(jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+                 "batch", "seq", "embed")
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_prefill_cache(p, cfg: ModelConfig, x, positions):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.rope != "none":
+        _, k = _rope_qk(cfg, k, k, positions)
+    return {"k": k, "v": v}
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache, pos, *, window: int = 0):
+    """x: [B,1,D]; cache k/v: [B,S,Hkv,D]; pos: scalar current length."""
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new = _rope_qk(cfg, q, k_new, posv)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(
+        cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(
+        cache["v"].dtype), pos, axis=1)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    s = k.shape[1]
+    kj = jnp.arange(s)
+    valid = kj <= pos
+    if window:
+        valid &= kj > pos - window
+    hkv = k.shape[2]
+    group = cfg.n_heads // hkv
+    qg = q.reshape(b, 1, hkv, group, cfg.d_head)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (cfg.d_head ** -0.5)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads, cfg.d_head).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3)
+# --------------------------------------------------------------------------
+def init_mla(pb: ParamBuilder, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        pb.dense("wq_a", (d, cfg.q_lora_rank), ("embed", "q_lora"))
+        pb.ones("q_a_norm", (cfg.q_lora_rank,), ("q_lora",))
+        pb.dense("wq_b", (cfg.q_lora_rank, nh, qk),
+                 ("q_lora", "heads", "head_dim"))
+    else:
+        pb.dense("wq", (d, nh, qk), ("embed", "heads", "head_dim"))
+    pb.dense("wkv_a", (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+             ("embed", "kv_lora"))
+    pb.ones("kv_a_norm", (cfg.kv_lora_rank,), ("kv_lora",))
+    pb.dense("wk_b", (cfg.kv_lora_rank, nh, cfg.qk_nope_dim),
+             ("kv_lora", "heads", "head_dim"))
+    pb.dense("wv_b", (cfg.kv_lora_rank, nh, cfg.v_head_dim),
+             ("kv_lora", "heads", "head_dim"))
+    pb.dense("wo", (nh, cfg.v_head_dim, d), ("heads", "head_dim", "embed"))
+
+
+def _mla_q(p, cfg, x):
+    from .layers import rms_norm
+    if cfg.q_lora_rank:
+        ql = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    return q  # [B,S,H, qk_nope+qk_rope]
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, causal=True,
+                window: int = 0):
+    from .layers import rms_norm
+    b, s, _ = x.shape
+    q = _mla_q(p, cfg, x)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    k_rope = k_rope[:, :, None, :]                       # [B,S,1,rope]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    k_rope_b = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], cfg.n_heads,
+                                         cfg.qk_rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = sdpa(q_full, k_full, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, pos, *, absorb=False):
+    """Latent-cached decode.  absorb=True: weight-absorbed (W_UK folded into
+    q, W_UV into output) so attention works in the latent space."""
+    from .layers import rms_norm
+    b = x.shape[0]
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = _mla_q(p, cfg, x)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+    kv = x @ p["wkv_a"]
+    c_new, kr_new = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, p["kv_a_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new[:, :, None, :], posv,
+                        cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    c_kv = shard(c_kv, "batch", "kv_seq", None)
+    s = c_kv.shape[1]
+    valid = jnp.arange(s) <= pos
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    if absorb:
+        # q_lat[h] = q_nope[h] @ W_UK[h]^T: [B,1,H,r]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+        logits = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                            c_kv.astype(jnp.float32))
+        logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                             k_rope.astype(jnp.float32))
+        logits = jnp.where(valid[None, None, None, :], logits * scale, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat.astype(x.dtype), p["wv_b"])
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["wk_b"])
+        v = jnp.einsum("btr,rhk->bthk", c_kv, p["wv_b"])
+        logits = jnp.einsum("bshk,bthk->bhst", q_nope.astype(jnp.float32),
+                            k_nope.astype(jnp.float32))
+        logits += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                             k_rope.astype(jnp.float32))
+        logits = jnp.where(valid[None, None, None, :], logits * scale, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", w,
+                         v.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (Whisper decoder)
+# --------------------------------------------------------------------------
+def init_cross(pb: ParamBuilder, cfg: ModelConfig):
+    init_gqa(pb, cfg)
+
+
+def cross_forward(p, cfg: ModelConfig, x, enc_kv):
+    """x: [B,Sd,D]; enc_kv: dict k/v [B,Se,H,D] (precomputed)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(p, cfg: ModelConfig, enc_out):
+    return {"k": jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"]),
+            "v": jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])}

@@ -1,0 +1,208 @@
+"""Shared model layers: norms, activations, RoPE/M-RoPE, init helpers.
+
+Pure-functional JAX: params are nested dicts of arrays; every param has a
+parallel *spec* entry (tuple of logical axis names) used by
+repro.parallel.sharding to derive NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+def dt(name: str):
+    return _DTYPES[name]
+
+
+# --------------------------------------------------------------------------
+# Param creation: values + logical-axis specs built side by side.
+# --------------------------------------------------------------------------
+class ParamBuilder:
+    """Collects params and their logical axis names."""
+
+    def __init__(self, key: jax.Array, param_dtype):
+        self.key = key
+        self.dtype = param_dtype
+        self.params: Params = {}
+        self.specs: Params = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, name: str, shape, axes, scale: Optional[float] = None):
+        fan_in = shape[0] if len(shape) > 1 else 1
+        std = scale if scale is not None else fan_in ** -0.5
+        v = (jax.random.normal(self._split(), shape, jnp.float32)
+             * std).astype(self.dtype)
+        self.params[name] = v
+        self.specs[name] = tuple(axes)
+        return v
+
+    def zeros(self, name: str, shape, axes):
+        self.params[name] = jnp.zeros(shape, self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def ones(self, name: str, shape, axes):
+        self.params[name] = jnp.ones(shape, self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def const(self, name: str, value, axes):
+        self.params[name] = jnp.asarray(value, self.dtype)
+        self.specs[name] = tuple(axes)
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._split(), self.dtype)
+        self.params[name] = sub.params
+        self.specs[name] = sub.specs
+        return sub
+
+
+def stack_layer_params(per_layer):
+    """List of per-layer param trees -> single tree stacked on axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *per_layer)
+
+
+def stack_layer_specs(spec):
+    """Prepend the 'layers' axis to every spec tuple."""
+    return jax.tree_util.tree_map(
+        lambda s: ("layers",) + tuple(s), spec,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x))
+
+
+# --------------------------------------------------------------------------
+def rms_norm(x, weight, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm(x, params, kind="rmsnorm", eps=1e-5):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params["bias"], eps)
+
+
+def init_norm(pb: ParamBuilder, name: str, d: int, kind="rmsnorm"):
+    sub = pb.child(name)
+    sub.ones("scale", (d,), ("embed",))
+    if kind == "layernorm":
+        sub.zeros("bias", (d,), ("embed",))
+
+
+def activate(x_gate, x_up, act: str):
+    """Gated/ungated MLP nonlinearity.  For non-GLU acts x_up is None."""
+    if act == "swiglu":
+        return jax.nn.silu(x_gate) * x_up
+    if act == "gelu":
+        return jax.nn.gelu(x_gate, approximate=True)
+    if act == "relu2":                     # squared ReLU (Nemotron/Primer)
+        r = jax.nn.relu(x_gate)
+        return r * r
+    raise ValueError(act)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2,
+                                      dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))                   # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv      # [..., S, D/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=10000.0):
+    """Qwen2-VL M-RoPE: positions3 [3, ..., S] (t, h, w) indices; the rotary
+    half-dims are partitioned into `sections` (t, h, w) groups."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))                   # [D/2]
+    sec = np.cumsum((0,) + tuple(sections))
+    assert sec[-1] == d // 2, (sections, d)
+    parts = []
+    for i in range(3):
+        ang_i = positions3[i][..., None].astype(jnp.float32) * \
+            inv[sec[i]:sec[i + 1]]
+        parts.append(ang_i)
+    ang = jnp.concatenate(parts, axis=-1)                     # [..., S, D/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings [S, D]."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# --------------------------------------------------------------------------
+# Sharding-constraint hook: models call shard(x, names...) with logical
+# names; repro.parallel.sharding activates a mesh-aware resolver.
+# --------------------------------------------------------------------------
+_SHARD_FN = None
+_EMBED_LOOKUP = None
+
+
+def set_shard_fn(fn):
+    global _SHARD_FN
+    _SHARD_FN = fn
+
+
+def shard(x, *logical_axes):
+    if _SHARD_FN is None:
+        return x
+    return _SHARD_FN(x, logical_axes)
+
+
+def set_embed_lookup(fn):
+    """Install a distributed embedding lookup (see parallel.sharding's
+    masked-gather shard_map — avoids XLA's replicate-on-gather fallback for
+    vocab-sharded tables)."""
+    global _EMBED_LOOKUP
+    _EMBED_LOOKUP = fn
+
+
+def embedding_lookup(table, tokens):
+    if _EMBED_LOOKUP is None:
+        return table[tokens]
+    return _EMBED_LOOKUP(table, tokens)

@@ -1,0 +1,489 @@
+"""Model assembly for the 10 assigned architectures.
+
+A model is (init, forward, decode) pure functions driven by ModelConfig:
+
+  * decoder-only LM (dense / MoE / MLA / M-RoPE): scan over stacked layers
+  * SSM (Mamba2): scan over stacked SSD layers
+  * hybrid (Zamba2): grouped scan over SSD layers + shared attention block
+  * enc-dec (Whisper): encoder scan + decoder scan with cross-attention
+
+Layer params are stacked on a leading `layers` axis and consumed by
+jax.lax.scan (keeps HLO small => fast multi-pod compiles); each layer is
+wrapped in jax.checkpoint with a configurable remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (ParamBuilder, dt, embedding_lookup, init_norm, norm,
+                     shard, sinusoidal_positions, stack_layer_params,
+                     stack_layer_specs)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def _init_attn_block(pb: ParamBuilder, cfg: ModelConfig, d_ff: int,
+                     moe: bool, cross: bool = False):
+    init_norm(pb, "ln1", cfg.d_model, cfg.norm)
+    a = pb.child("attn")
+    if cfg.attn == "mla":
+        attn.init_mla(a, cfg)
+    else:
+        attn.init_gqa(a, cfg)
+    if cross:
+        init_norm(pb, "ln_cross", cfg.d_model, cfg.norm)
+        attn.init_cross(pb.child("cross"), cfg)
+    init_norm(pb, "ln2", cfg.d_model, cfg.norm)
+    m = pb.child("mlp")
+    if moe:
+        moe_mod.init_moe(m, cfg)
+    else:
+        moe_mod.init_dense_mlp(m, cfg, d_ff)
+
+
+def _init_mamba_block(pb: ParamBuilder, cfg: ModelConfig):
+    init_norm(pb, "ln1", cfg.d_model, cfg.norm)
+    ssm_mod.init_mamba2(pb.child("ssm"), cfg)
+
+
+def _stacked(key, n, init_one):
+    per, spec = [], None
+    for i in range(n):
+        key, sub = jax.random.split(key)
+        pb = ParamBuilder(sub, None)
+        spec_i = init_one(pb, i)
+        per.append(pb.params)
+        spec = pb.specs
+    return stack_layer_params(per), stack_layer_specs(spec)
+
+
+def init_model(cfg: ModelConfig, key: jax.Array):
+    """-> (params, specs) trees."""
+    pdt = dt(cfg.param_dtype)
+    pb = ParamBuilder(key, pdt)
+    pb.dense("embed", (cfg.vocab, cfg.d_model), ("vocab", None),
+             scale=0.02)
+    if not cfg.tie_embeddings:
+        pb.dense("lm_head", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                 scale=0.02)
+    init_norm(pb, "ln_f", cfg.d_model, cfg.norm)
+
+    def block_init(make):
+        def one(b, i):
+            b.dtype = pdt
+            make(b, i)
+        return one
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_dense = cfg.first_dense_layers
+        if n_dense:
+            p, s = _stacked(pb._split(), n_dense, block_init(
+                lambda b, i: _init_attn_block(
+                    b, cfg, cfg.d_ff_dense or cfg.d_ff, moe=False)))
+            pb.params["dense_layers"], pb.specs["dense_layers"] = p, s
+        p, s = _stacked(pb._split(), cfg.n_layers - n_dense, block_init(
+            lambda b, i: _init_attn_block(b, cfg, cfg.d_ff,
+                                          moe=cfg.family == "moe")))
+        pb.params["layers"], pb.specs["layers"] = p, s
+    elif cfg.family == "ssm":
+        p, s = _stacked(pb._split(), cfg.n_layers, block_init(
+            lambda b, i: _init_mamba_block(b, cfg)))
+        pb.params["layers"], pb.specs["layers"] = p, s
+    elif cfg.family == "hybrid":
+        p, s = _stacked(pb._split(), cfg.n_layers, block_init(
+            lambda b, i: _init_mamba_block(b, cfg)))
+        pb.params["layers"], pb.specs["layers"] = p, s
+        sh = pb.child("shared_block")
+        sh.dtype = pdt
+        _init_attn_block(sh, cfg, cfg.d_ff, moe=False)
+    elif cfg.family == "encdec":
+        p, s = _stacked(pb._split(), cfg.enc_layers, block_init(
+            lambda b, i: _init_attn_block(b, cfg, cfg.d_ff, moe=False)))
+        pb.params["enc_layers"], pb.specs["enc_layers"] = p, s
+        p, s = _stacked(pb._split(), cfg.dec_layers, block_init(
+            lambda b, i: _init_attn_block(b, cfg, cfg.d_ff, moe=False,
+                                          cross=True)))
+        pb.params["dec_layers"], pb.specs["dec_layers"] = p, s
+        init_norm(pb, "ln_enc", cfg.d_model, cfg.norm)
+    else:
+        raise ValueError(cfg.family)
+    return pb.params, pb.specs
+
+
+# ==========================================================================
+# forward (train / prefill)
+# ==========================================================================
+def _attn_block_fwd(p, cfg: ModelConfig, x, positions, *, moe: bool,
+                    causal=True, window=0, enc_kv=None):
+    h = norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if cfg.attn == "mla":
+        a = attn.mla_forward(p["attn"], cfg, h, positions, causal=causal,
+                             window=window)
+    else:
+        a = attn.gqa_forward(p["attn"], cfg, h, positions, causal=causal,
+                             window=window)
+    x = x + a
+    if enc_kv is not None:
+        h = norm(x, p["ln_cross"], cfg.norm, cfg.norm_eps)
+        x = x + attn.cross_forward(p["cross"], cfg, h, enc_kv)
+    h = norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if moe:
+        m = moe_mod.moe_mlp(p["mlp"], cfg, h)
+    else:
+        m = moe_mod.dense_mlp(p["mlp"], cfg, h)
+    return x + m
+
+
+def _mamba_block_fwd(p, cfg: ModelConfig, x):
+    h = norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    return x + ssm_mod.mamba2_forward(p["ssm"], cfg, h)
+
+
+def _scan_layers(layer_fn, stacked_params, x, remat: str):
+    fn = layer_fn
+    policy = REMAT_POLICIES.get(remat)
+    if remat != "none":
+        fn = jax.checkpoint(fn, policy=policy)
+
+    def body(carry, lp):
+        return fn(lp, carry), None
+
+    x, _ = jax.lax.scan(body, x, stacked_params)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: str = "dots_no_batch", logits_mode: str = "all"):
+    """-> logits [B, S, V] (logits_mode="last": [B, 1, V] — serving
+    prefill computes hidden states everywhere but logits only for the last
+    position).
+
+    batch keys by family:
+      lm/moe/dense: tokens [B,S] int32
+      vlm:          embeds [B,S,D], positions3 [3,B,S]
+      encdec:       frames [B,Se,D], tokens [B,Sd]
+      ssm/hybrid:   tokens [B,S]
+    """
+    cdt = dt(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        return _encdec_forward(params, cfg, batch, remat, logits_mode)
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = batch["embeds"].astype(cdt)
+        positions = batch["positions3"]
+        b, s = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embedding_lookup(params["embed"], tokens).astype(cdt)
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+    x = shard(x, "batch", "seq", "embed")
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.first_dense_layers:
+            cfg_dense = dataclasses.replace(cfg, d_ff=cfg.d_ff_dense
+                                            or cfg.d_ff)
+            x = _scan_layers(
+                lambda p, h: _attn_block_fwd(p, cfg_dense, h, positions,
+                                             moe=False),
+                params["dense_layers"], x, remat)
+        x = _scan_layers(
+            lambda p, h: _attn_block_fwd(p, cfg, h, positions,
+                                         moe=cfg.family == "moe",
+                                         window=cfg.sliding_window),
+            params["layers"], x, remat)
+    elif cfg.family == "ssm":
+        x = _scan_layers(lambda p, h: _mamba_block_fwd(p, cfg, h),
+                         params["layers"], x, remat)
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups = cfg.n_layers // k
+        lp = params["layers"]
+        for gi in range(n_groups):
+            seg = jax.tree_util.tree_map(lambda a: a[gi * k:(gi + 1) * k],
+                                         lp)
+            x = _scan_layers(lambda p, h: _mamba_block_fwd(p, cfg, h),
+                             seg, x, remat)
+            x = _attn_block_fwd(params["shared_block"], cfg, x, positions,
+                                moe=False, window=cfg.sliding_window)
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    if logits_mode == "hidden":
+        return x
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = shard(jnp.einsum("bsd,dv->bsv", x, head.astype(cdt)),
+                   "batch", None, "vocab")
+    return logits
+
+
+def _encdec_forward(params, cfg: ModelConfig, batch, remat,
+                    logits_mode: str = "all"):
+    cdt = dt(cfg.compute_dtype)
+    frames = batch["frames"].astype(cdt)          # stub frame embeddings
+    tokens = batch["tokens"]
+    se = frames.shape[1]
+    b, sd = tokens.shape
+    pos_e = jnp.broadcast_to(jnp.arange(se)[None, :], (b, se))
+    pos_d = jnp.broadcast_to(jnp.arange(sd)[None, :], (b, sd))
+
+    x = frames + sinusoidal_positions(se, cfg.d_model).astype(cdt)[None]
+    x = _scan_layers(
+        lambda p, h: _attn_block_fwd(p, cfg, h, pos_e, moe=False,
+                                     causal=False),
+        params["enc_layers"], x, remat)
+    enc_out = norm(x, params["ln_enc"], cfg.norm, cfg.norm_eps)
+
+    y = embedding_lookup(params["embed"], tokens).astype(cdt)
+    y = y + sinusoidal_positions(sd, cfg.d_model).astype(cdt)[None]
+
+    def dec_layer(p, h):
+        enc_kv = attn.cross_kv(p["cross"], cfg, enc_out)
+        return _attn_block_fwd(p, cfg, h, pos_d, moe=False, causal=True,
+                               enc_kv=enc_kv)
+
+    y = _scan_layers(dec_layer, params["dec_layers"], y, remat)
+    y = norm(y, params["ln_f"], cfg.norm, cfg.norm_eps)
+    if logits_mode == "hidden":
+        return y
+    if logits_mode == "last":
+        y = y[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", y, head.astype(cdt))
+
+
+# ==========================================================================
+# decode (single-token serve step against a cache)
+# ==========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked per-layer caches for decode."""
+    cdt = dt(cfg.compute_dtype)
+
+    def stack(make, n):
+        one = make()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attn == "mla":
+            make = lambda: attn.mla_init_cache(cfg, batch, max_len, cdt)
+        else:
+            make = lambda: attn.gqa_init_cache(cfg, batch, max_len, cdt)
+        cache = {"layers": stack(make, cfg.n_layers - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            cache["dense_layers"] = stack(make, cfg.first_dense_layers)
+        return cache
+    if cfg.family == "ssm":
+        return {"layers": stack(
+            lambda: ssm_mod.mamba2_init_state(cfg, batch, cdt),
+            cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "layers": stack(lambda: ssm_mod.mamba2_init_state(cfg, batch,
+                                                              cdt),
+                            cfg.n_layers),
+            "shared": stack(lambda: attn.gqa_init_cache(cfg, batch,
+                                                        max_len, cdt),
+                            n_groups)}
+    if cfg.family == "encdec":
+        return {"dec": stack(lambda: attn.gqa_init_cache(cfg, batch,
+                                                         max_len, cdt),
+                             cfg.dec_layers),
+                "enc_out": jnp.zeros((batch, max_len, cfg.d_model), cdt)}
+    raise ValueError(cfg.family)
+
+
+def _attn_block_decode(p, cfg, x, cache, pos, enc_out=None, absorb=False):
+    h = norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if cfg.attn == "mla":
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache, pos,
+                                   absorb=absorb)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, pos,
+                                   window=cfg.sliding_window)
+    x = x + a
+    if enc_out is not None:
+        h = norm(x, p["ln_cross"], cfg.norm, cfg.norm_eps)
+        enc_kv = attn.cross_kv(p["cross"], cfg, enc_out)
+        x = x + attn.cross_forward(p["cross"], cfg, h, enc_kv)
+    h = norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    moe = cfg.family == "moe" and "router" in p["mlp"]
+    if moe:
+        m = moe_mod.moe_mlp(p["mlp"], cfg, h)
+    else:
+        m = moe_mod.dense_mlp(p["mlp"], cfg, h)
+    return x + m, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                mla_absorb: bool = False):
+    """token: [B] int32; pos: scalar int32 (current cache length).
+    -> (logits [B, V], new_cache)."""
+    cdt = dt(cfg.compute_dtype)
+    x = embedding_lookup(params["embed"], token)[:, None, :].astype(cdt)
+    x = shard(x, "batch", None, "embed")
+
+    def scan_blocks(block_fn, stacked_p, stacked_c, x):
+        def body(carry, pc):
+            p, c = pc
+            h, c2 = block_fn(p, carry, c)
+            return h, c2
+        x, new_c = jax.lax.scan(body, x, (stacked_p, stacked_c))
+        return x, new_c
+
+    new_cache = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.first_dense_layers:
+            cfg_d = dataclasses.replace(cfg, d_ff=cfg.d_ff_dense or cfg.d_ff,
+                                        family="dense")
+            x, c = scan_blocks(
+                lambda p, h, c: _attn_block_decode(p, cfg_d, h, c, pos,
+                                                   absorb=mla_absorb),
+                params["dense_layers"], cache["dense_layers"], x)
+            new_cache["dense_layers"] = c
+        x, c = scan_blocks(
+            lambda p, h, c: _attn_block_decode(p, cfg, h, c, pos,
+                                               absorb=mla_absorb),
+            params["layers"], cache["layers"], x)
+        new_cache["layers"] = c
+    elif cfg.family == "ssm":
+        x, c = scan_blocks(
+            lambda p, h, c: _ssm_block_decode(p, cfg, h, c),
+            params["layers"], cache["layers"], x)
+        new_cache["layers"] = c
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups = cfg.n_layers // k
+        lp, lc = params["layers"], cache["layers"]
+        shared_cs = []
+        for gi in range(n_groups):
+            seg_p = jax.tree_util.tree_map(lambda a: a[gi * k:(gi + 1) * k],
+                                           lp)
+            seg_c = jax.tree_util.tree_map(lambda a: a[gi * k:(gi + 1) * k],
+                                           lc)
+            x, c = scan_blocks(
+                lambda p, h, cc: _ssm_block_decode(p, cfg, h, cc),
+                seg_p, seg_c, x)
+            shared_c = jax.tree_util.tree_map(lambda a: a[gi],
+                                              cache["shared"])
+            x, sc = _attn_block_decode(params["shared_block"], cfg, x,
+                                       shared_c, pos)
+            shared_cs.append(sc)
+            if gi == 0:
+                new_cache["layers"] = c
+            else:
+                new_cache["layers"] = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], 0),
+                    new_cache["layers"], c)
+        new_cache["shared"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, 0), *shared_cs)
+    elif cfg.family == "encdec":
+        enc_out = cache["enc_out"]
+        x, c = scan_blocks(
+            lambda p, h, cc: _attn_block_decode(p, cfg, h, cc, pos,
+                                                enc_out=enc_out),
+            params["dec_layers"], cache["dec"], x)
+        new_cache["dec"] = c
+        new_cache["enc_out"] = enc_out
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(x, params["ln_f"], cfg.norm, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))[:, 0]
+    return logits, new_cache
+
+
+def _ssm_block_decode(p, cfg, x, state):
+    h = norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    y, state = ssm_mod.mamba2_decode(p["ssm"], cfg, h, state)
+    return x + y, state
+
+
+# ==========================================================================
+CE_CHUNK = 512  # sequence positions per cross-entropy chunk
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *,
+            remat: str = "dots_no_batch"):
+    """Next-token cross-entropy.  The head + log-softmax are evaluated in
+    sequence chunks under jax.checkpoint so the [B, S, V] fp32 logits never
+    materialize (fused-CE pattern); falls back to one chunk for short
+    sequences."""
+    cdt = dt(cfg.compute_dtype)
+    hidden = forward(params, cfg, batch, remat=remat, logits_mode="hidden")
+    tokens = batch["tokens"] if cfg.family != "vlm" or "tokens" in batch \
+        else batch["labels"]
+    if cfg.family == "vlm" and "labels" in batch:
+        tokens = batch["labels"]
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cdt)
+    h = hidden[:, :-1]
+    targets = tokens[:, 1:]
+    b, sm1, d = h.shape
+
+    def chunk_nll(hc, tc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, head)
+        logits = shard(logits, "batch", None, "vocab")
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+
+    chunk = CE_CHUNK
+    if sm1 % chunk != 0 or sm1 <= chunk:
+        return chunk_nll(h, targets).mean()
+    n = sm1 // chunk
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, chunk), 1, 0)
+
+    def body(acc, ht):
+        hi, ti = ht
+        return acc + jax.checkpoint(chunk_nll)(hi, ti).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (b * sm1)
+
+
+def cache_specs(cfg: ModelConfig):
+    """Logical-axis spec tree matching init_cache's structure."""
+    gqa = {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+           "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+    mla = {"c_kv": ("layers", "batch", "kv_seq", None),
+           "k_rope": ("layers", "batch", "kv_seq", None)}
+    ssm = {"conv": ("layers", "batch", None, "ssm_inner"),
+           "ssm": ("layers", "batch", "ssm_heads", None, None)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        per = mla if cfg.attn == "mla" else gqa
+        out = {"layers": per}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = per
+        return out
+    if cfg.family == "ssm":
+        return {"layers": ssm}
+    if cfg.family == "hybrid":
+        return {"layers": ssm, "shared": gqa}
+    if cfg.family == "encdec":
+        return {"dec": gqa,
+                "enc_out": ("batch", "kv_seq", "embed")}
+    raise ValueError(cfg.family)

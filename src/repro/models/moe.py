@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with fixed capacity.
+
+Dispatch is scatter-based (sort-free): positions within each expert's buffer
+come from an exclusive cumsum over the one-hot assignment, tokens beyond
+capacity are dropped (GShard-style).  The expert buffers [E, C, d] are
+sharded over the `model` mesh axis (expert parallelism); XLA SPMD inserts
+the all-to-all at the sharding boundary.  Shared experts (DeepSeekMoE) run
+densely on every token.
+
+FLOP cost ~ top_k * capacity_factor * T * d * d_ff — linear in tokens, not
+the quadratic T*E*C of einsum dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamBuilder, activate, shard
+
+
+def _mlp_shapes(cfg: ModelConfig, d_ff: int):
+    glu = cfg.act == "swiglu"
+    return glu
+
+
+def init_dense_mlp(pb: ParamBuilder, cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    pb.dense("w_gate", (d, d_ff), ("embed", "ff"))
+    if cfg.act == "swiglu":
+        pb.dense("w_up", (d, d_ff), ("embed", "ff"))
+    pb.dense("w_down", (d_ff, d), ("ff", "embed"))
+
+
+def dense_mlp(p, cfg: ModelConfig, x, d_ff=None):
+    g = shard(x @ p["w_gate"], "batch", "seq", "ff")
+    up = x @ p["w_up"] if cfg.act == "swiglu" else None
+    h = activate(g, up, cfg.act)
+    return shard(h @ p["w_down"], "batch", "seq", "embed")
+
+
+def init_moe(pb: ParamBuilder, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    pb.dense("router", (d, e), ("embed", "experts"), scale=0.02)
+    # expert weights shard on the expert dim ONLY so the grouped matmul
+    # against [E(model), C(data), d] dispatch buffers is fully local (no
+    # weight re-gather; the all-to-all happens at dispatch/combine).
+    pb.dense("w_gate", (e, d, f), ("experts", None, None))
+    if cfg.act == "swiglu":
+        pb.dense("w_up", (e, d, f), ("experts", None, None))
+    pb.dense("w_down", (e, f, d), ("experts", None, None))
+    if cfg.n_shared_experts:
+        sub = pb.child("shared")
+        init_dense_mlp(sub, cfg, cfg.d_expert * cfg.n_shared_experts)
+
+
+# Hook installed by parallel.sharding: explicit expert-parallel execution
+# (shard_map + all-to-all).  None => single-device/global fallback below.
+_MOE_EP_IMPL = None
+
+
+def set_moe_ep_impl(fn):
+    global _MOE_EP_IMPL
+    _MOE_EP_IMPL = fn
+
+
+def moe_mlp(p, cfg: ModelConfig, x):
+    """x: [B,S,D] -> [B,S,D]."""
+    if _MOE_EP_IMPL is not None:
+        y = _MOE_EP_IMPL(p, cfg, x)
+        if y is not None:
+            if cfg.n_shared_experts:
+                y = y + dense_mlp(p["shared"], cfg, x)
+            return y
+    return _moe_mlp_global(p, cfg, x)
+
+
+def _moe_mlp_global(p, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(k, (t * k * cfg.capacity_factor) // e))
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(-1)                            # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot             # exclusive cumsum
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+
+    # scatter tokens into expert buffers [E, C, d]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0)                       # [T*k, d]
+    buf = buf.at[flat_e, jnp.minimum(flat_pos, cap - 1)].add(
+        jnp.where(keep[:, None], src, 0))
+    buf = shard(buf, "experts", "moe_cap", None)
+
+    g = shard(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]),
+              "experts", "moe_cap", None)
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"]) \
+        if cfg.act == "swiglu" else None
+    h = activate(g, up, cfg.act)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = shard(out_buf, "experts", "moe_cap", None)
+
+    # gather back + combine with routing weights
+    gathered = out_buf[flat_e, jnp.minimum(flat_pos, cap - 1)]  # [T*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_p.reshape(-1)[:, None].astype(gathered.dtype)
+    y = (gathered * w).reshape(t, k, d).sum(axis=1).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        y = y + dense_mlp(p["shared"], cfg, x)
+    return y
+
+
+def moe_local_route_dispatch(xt, router, cfg, cap):
+    """Local routing + capacity dispatch of a flat token slab [T_loc, d]
+    into per-expert buffers [E, cap, d].  Pure jnp (shard_map-safe)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    flat_e = top_i.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    src = jnp.repeat(xt, k, axis=0)
+    buf = buf.at[flat_e, jnp.minimum(flat_pos, cap - 1)].add(
+        jnp.where(keep[:, None], src, 0))
+    return buf, (flat_e, flat_pos, keep, top_p)
+
+
+def moe_combine(out_buf, route, t, k, d, cap):
+    flat_e, flat_pos, keep, top_p = route
+    gathered = out_buf[flat_e, jnp.minimum(flat_pos, cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_p.reshape(-1)[:, None].astype(gathered.dtype)
+    return (gathered * w).reshape(t, k, d).sum(axis=1)
+
+
+def expert_ffn(buf, p, cfg):
+    """buf: [E_loc, C, d] x expert weight shards [E_loc, d, f]."""
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"]) \
+        if cfg.act == "swiglu" else None
+    h = activate(g, up, cfg.act)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def aux_load_balance_loss(p, cfg: ModelConfig, x):
+    """Switch-style load-balance auxiliary loss (importance * load)."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_i = jax.lax.top_k(probs, cfg.top_k)[1]
+    load = jnp.mean(jax.nn.one_hot(top_i, cfg.n_experts).sum(1), axis=0)
+    importance = probs.mean(0)
+    return cfg.n_experts * jnp.sum(load * importance)

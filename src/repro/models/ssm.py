@@ -1,0 +1,249 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside chunks of length Q, linear state recurrence across chunks —
+all matmuls, MXU-friendly.  Decode is the O(1) recurrent state update.
+
+Layout: x [B, T, D] -> in_proj -> (z, xc, B, C, dt); causal depthwise conv
+on (xc, B, C); SSD over heads H = d_inner / headdim with scalar A per head;
+gated (silu(z)) output projection.  The per-chunk core also exists as a
+Pallas kernel (repro.kernels.ssd_scan) validated against `ssd_reference`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ParamBuilder, shard
+
+
+def init_mamba2(pb: ParamBuilder, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.d_state
+    nh = cfg.n_ssm_heads
+    conv_dim = di + 2 * g * n
+    pb.dense("in_proj", (d, 2 * di + 2 * g * n + nh), ("embed", "ssm_inner"))
+    pb.dense("conv_w", (cfg.d_conv, conv_dim), (None, "ssm_inner"),
+             scale=cfg.d_conv ** -0.5)
+    pb.zeros("conv_b", (conv_dim,), ("ssm_inner",))
+    pb.const("A_log", jnp.log(jnp.linspace(1.0, 16.0, nh)), ("ssm_heads",))
+    pb.zeros("dt_bias", (nh,), ("ssm_heads",))
+    pb.ones("D", (nh,), ("ssm_heads",))
+    pb.ones("out_norm", (di,), ("ssm_inner",))
+    pb.dense("out_proj", (di, d), ("ssm_inner", "embed"))
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.d_state
+    z, xc, B, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xc, B, C, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv1d.  xbc: [B,T,C]; w: [K,C].  Returns (y, new
+    state [B,K-1,C]) when state given (decode), else y with zero-history."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)            # [B, T+K-1, C]
+    # windowed sum: y[t] = sum_j w[j] * full[t+j]
+    y = sum(full[:, j:j + xbc.shape[1], :] * w[j] for j in range(k))
+    y = y + b
+    new_state = full[:, -(k - 1):, :] if k > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < l <= i} x[..., l].
+    Lower-triangular (i >= j), -inf above diagonal."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunk_scan(xh, dt, A, Bh, Ch, chunk: int):
+    """Chunked SSD.  xh: [B,T,H,P], dt: [B,T,H] (post-softplus),
+    A: [H] (negative), Bh/Ch: [B,T,G,N].  Returns y: [B,T,H,P].
+
+    Reference: Mamba2 paper listing; pure jnp (oracle for the Pallas
+    kernel)."""
+    b, t, h, p = xh.shape
+    g, n = Bh.shape[2], Bh.shape[3]
+    q = chunk
+    assert t % q == 0, (t, q)
+    nc = t // q
+    rep = h // g
+
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bh.reshape(b, nc, q, g, n)
+    Cc = Ch.reshape(b, nc, q, g, n)
+    Bex = jnp.repeat(Bc, rep, axis=3)                      # [B,nc,Q,H,N]
+    Cex = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                      # [B,nc,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)                         # [B,nc,Q,H]
+
+    # intra-chunk (diagonal blocks): L = exp(segsum(dA))
+    L = jnp.exp(segsum(jnp.moveaxis(dA, -1, 2)))           # [B,nc,H,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cex, Bex)    # [B,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, L.astype(scores.dtype), dtc, xc)
+
+    # chunk states: decay from position to chunk end
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # [B,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchnp",
+                        Bex, decay_out, dtc, xc)           # [B,nc,H,N,P]
+
+    # inter-chunk recurrence: s_{c} carried with decay exp(sum dA_c)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # [B,nc,H]
+
+    def step(carry, inp):
+        s_prev = carry
+        dec, st = inp
+        s = s_prev * dec[..., None, None] + st
+        return s, s_prev
+
+    init = jnp.zeros((b, h, n, p), states.dtype)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(chunk_decay, 1, 0),
+                     jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # [B,nc,H,N,P]
+
+    # inter-chunk contribution: decay from chunk start to position
+    decay_in = jnp.exp(dA_cs)                              # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                       Cex, decay_in, prev_states)
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y
+
+
+def ssd_chunk_scan_streaming(xh, dt, A, Bh, Ch, chunk: int):
+    """Memory-lean SSD: one lax.scan over chunks carrying the SSM state, so
+    peak temp is a single chunk's [B,H,Q,Q] block instead of all chunks at
+    once (the forward path of mamba2_forward; `ssd_chunk_scan` keeps the
+    all-chunks form as the kernel oracle)."""
+    b, t, h, p = xh.shape
+    g, n = Bh.shape[2], Bh.shape[3]
+    q = chunk
+    assert t % q == 0, (t, q)
+    nc = t // q
+    rep = h // g
+    xc = jnp.moveaxis(xh.reshape(b, nc, q, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)
+    Bc = jnp.moveaxis(jnp.repeat(Bh.reshape(b, nc, q, g, n), rep, axis=3),
+                      1, 0)
+    Cc = jnp.moveaxis(jnp.repeat(Ch.reshape(b, nc, q, g, n), rep, axis=3),
+                      1, 0)
+
+    def body(state, inp):
+        x_i, dt_i, b_i, c_i = inp                      # [B,Q,H,*]
+        dA = dt_i * A[None, None, :]                   # [B,Q,H]
+        dA_cs = jnp.cumsum(dA, axis=1)
+        L = jnp.exp(segsum(jnp.moveaxis(dA, -1, 1)))   # [B,H,Q,Q]
+        scores = jnp.einsum("bqhn,bkhn->bhqk", c_i, b_i)
+        y = jnp.einsum("bhqk,bhqk,bkh,bkhp->bqhp", scores,
+                       L.astype(scores.dtype), dt_i, x_i)
+        decay_in = jnp.exp(dA_cs)                      # [B,Q,H]
+        y += jnp.einsum("bqhn,bqh,bhnp->bqhp", c_i, decay_in, state)
+        total = dA_cs[:, -1, :]                        # [B,H]
+        decay_out = jnp.exp(total[:, None, :] - dA_cs)
+        new_state = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bqhn,bqh,bqh,bqhp->bhnp", b_i, decay_out, dt_i, x_i)
+        return new_state, y
+
+    s0 = jnp.zeros((b, h, n, p), xh.dtype)
+    _, ys = jax.lax.scan(body, s0, (xc, dtc, Bc, Cc))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, t, h, p)
+
+
+def ssd_reference(xh, dt, A, Bh, Ch):
+    """O(T^2) attention-form oracle: y_t = sum_{s<=t} C_t^T (prod decay)
+    B_s dt_s x_s."""
+    b, t, h, p = xh.shape
+    rep = h // Bh.shape[2]
+    Bex = jnp.repeat(Bh, rep, axis=2)
+    Cex = jnp.repeat(Ch, rep, axis=2)
+    dA = dt * A[None, None, :]
+    L = jnp.exp(segsum(jnp.moveaxis(dA, -1, 1)))           # [B,H,T,T]
+    scores = jnp.einsum("bqhn,bkhn->bhqk", Cex, Bex)
+    return jnp.einsum("bhqk,bhqk,bkh,bkhp->bqhp",
+                      scores, L.astype(scores.dtype), dt, xh)
+
+
+def mamba2_forward(p, cfg: ModelConfig, x):
+    """x: [B,T,D] -> [B,T,D]."""
+    from .layers import rms_norm
+    zxbcdt = shard(x @ p["in_proj"], "batch", None, "ssm_inner")
+    z, xc, B, C, dtr = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.d_state
+    xc, B, C = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    b, t, _ = x.shape
+    h, pdim = cfg.n_ssm_heads, cfg.ssm_headdim
+    xh = shard(xc.reshape(b, t, h, pdim), "batch", None, "ssm_heads", None)
+    Bh = B.reshape(b, t, g, n)
+    Ch = C.reshape(b, t, g, n)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunk_scan_streaming(xh.astype(jnp.float32), dt, A,
+                                 Bh.astype(jnp.float32),
+                                 Ch.astype(jnp.float32), cfg.chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None,
+                                                                :, None]
+    y = shard(y, "batch", None, "ssm_heads", None)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return shard(y @ p["out_proj"], "batch", "seq", "embed")
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype):
+    g, n = cfg.ssm_ngroups, cfg.d_state
+    conv_dim = cfg.d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, n, cfg.ssm_headdim),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, state):
+    """Single-step recurrence.  x: [B,1,D]."""
+    from .layers import rms_norm
+    zxbcdt = x @ p["in_proj"]
+    z, xc, B, C, dtr = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state["conv"])
+    di = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.d_state
+    xc, B, C = jnp.split(conv_out, [di, di + g * n], axis=-1)
+    b = x.shape[0]
+    h, pdim = cfg.n_ssm_heads, cfg.ssm_headdim
+    xh = xc.reshape(b, h, pdim).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, g, n), h // g, axis=1)    # [B,H,N]
+    Ch = jnp.repeat(C.reshape(b, g, n), h // g, axis=1)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                       # [B,H]
+    s = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh.astype(jnp.float32), dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), s)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": s}

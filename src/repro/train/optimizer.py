@@ -1,0 +1,98 @@
+"""AdamW with fp32 master weights, global-norm clipping, and warmup+cosine
+schedule.  Optimizer state inherits the param shardings (ZeRO-style: the
+fp32 m/v/master copies are sharded exactly like the bf16 params, so the
+optimizer adds no replicated memory)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_fp32: bool = True
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any          # fp32 params (or None-tree if disabled)
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(cfg: OptConfig, params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    # copy=True: with fp32 params astype would alias the same buffer and
+    # break donation (same buffer donated twice in the train step).
+    master = jax.tree_util.tree_map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True),
+        params) if cfg.master_fp32 else None
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree_util.tree_map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(cfg: OptConfig, params, grads, state: OptState):
+    """-> (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        base = w if w is not None else p.astype(jnp.float32)
+        new = base - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_w = tdef.flatten_up_to(state.master) if state.master is not None \
+        else [None] * len(flat_p)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v,
+                                      flat_w)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_w = tdef.unflatten([o[3] for o in out]) if state.master is not None \
+        else None
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, m=new_m, v=new_v, master=new_w), \
+        metrics

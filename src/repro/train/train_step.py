@@ -1,0 +1,106 @@
+"""Train-step assembly: loss + grad + optimizer, with optional microbatch
+gradient accumulation and int8 gradient compression (error feedback).
+
+Under pjit/SPMD the data-parallel gradient mean is implicit in the sharded
+loss; gradient compression is therefore implemented as a *explicit*
+reduce-scatter/all-gather rewrite via shard_map when enabled (the collective
+then moves int8 instead of fp32 — 4x less DP traffic)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm_loss
+from .optimizer import OptConfig, OptState, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "dots_no_batch"
+    microbatches: int = 1            # gradient accumulation steps
+    grad_compression: bool = False   # int8 DP all-reduce (see collectives)
+
+
+class TrainState:
+    """Lightweight pytree container (params + opt)."""
+
+    def __init__(self, params, opt: OptState, compress_err=None):
+        self.params = params
+        self.opt = opt
+        self.compress_err = compress_err
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.compress_err), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int):
+    def sp(x):
+        b = x.shape[0] if x.ndim >= 1 else None
+        if x.ndim >= 2 and x.shape[0] % n == 0 and x.shape[0] > 1:
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        raise ValueError(f"cannot split batch dim {x.shape} into {n}")
+    # positions3 is [3, B, S]: swap to keep batch leading for the split
+    out = {}
+    for k, v in batch.items():
+        if k == "positions3":
+            v = jnp.moveaxis(v, 1, 0)          # [B, 3, S]
+            v = sp(v)
+            v = jnp.moveaxis(v, 2, 1)          # [n, 3, b, S]
+            out[k] = v
+        else:
+            out[k] = sp(v)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    tc: TrainConfig = TrainConfig()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch, remat=tc.remat)
+
+    def grads_of(params, batch):
+        if tc.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        mb = _split_microbatches(batch, tc.microbatches)
+
+        def body(carry, mbi):
+            acc, lacc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mbi)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (acc, lacc + l), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gacc, lsum), _ = jax.lax.scan(body, (zero, 0.0), mb)
+        inv = 1.0 / tc.microbatches
+        return lsum * inv, jax.tree_util.tree_map(lambda g: g * inv, gacc)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        if tc.grad_compression and state.compress_err is not None:
+            from ..parallel.collectives import compress_grads_inplace
+            grads, new_err = compress_grads_inplace(grads,
+                                                    state.compress_err)
+        else:
+            new_err = state.compress_err
+        params, opt, metrics = apply_updates(opt_cfg, state.params, grads,
+                                             state.opt)
+        metrics["loss"] = loss
+        return TrainState(params, opt, new_err), metrics
+
+    return train_step

@@ -1,0 +1,143 @@
+"""Multi-device integration tests.  These run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
+process keeps its single CPU device (per the dry-run isolation rule)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.configs.shapes import ShapeSpec
+        from repro.parallel.sharding import make_rules
+        from repro.launch.steps import build_train_step
+        from repro.launch.mesh import make_mesh
+        from repro.models import init_model
+        from repro.train.optimizer import OptConfig, init_opt_state
+        from repro.train.train_step import TrainState, TrainConfig, \\
+            make_train_step
+
+        cfg = reduced_config("smollm-135m")
+        spec = ShapeSpec("t", 32, 8, "train")
+        opt = OptConfig(master_fp32=True)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks}
+
+        # single-device reference
+        params, _ = init_model(cfg, jax.random.PRNGKey(0))
+        st0 = TrainState(params, init_opt_state(opt, params), None)
+        step0 = make_train_step(cfg, opt, TrainConfig(remat="none"))
+        _, m0 = jax.jit(step0)(st0, batch)
+
+        # 8-device sharded
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rules = make_rules(mesh)
+        with mesh:
+            jit_fn, _, (state_sh, b_sh) = build_train_step(
+                cfg, mesh, rules, spec, opt_cfg=opt,
+                tc=TrainConfig(remat="none"))
+            params2, _ = init_model(cfg, jax.random.PRNGKey(0))
+            st = TrainState(params2, init_opt_state(opt, params2), None)
+            st = jax.device_put(st, state_sh)
+            b = jax.device_put(batch, b_sh)
+            st, m1 = jit_fn(st, b)
+        l0, l1 = float(m0["loss"]), float(m1["loss"])
+        print("LOSSES", l0, l1)
+        assert abs(l0 - l1) / abs(l0) < 5e-3, (l0, l1)
+    """)
+    assert "LOSSES" in out
+
+
+def test_sharded_decode_matches_single_device():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import reduced_config
+        from repro.configs.shapes import ShapeSpec
+        from repro.parallel.sharding import make_rules
+        from repro.launch.steps import build_decode_step
+        from repro.launch.mesh import make_mesh
+        from repro.models import decode_step, init_cache, init_model
+
+        cfg = reduced_config("granite-moe-1b-a400m")
+        params, _ = init_model(cfg, jax.random.PRNGKey(0))
+        tok = jnp.array([3, 5, 7, 9], jnp.int32)
+        cache = init_cache(cfg, 4, 16)
+        ref, _ = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t, 0))(
+            params, cache, tok)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rules = make_rules(mesh)
+        spec = ShapeSpec("d", 16, 4, "decode")
+        with mesh:
+            jit_fn, _, (p_sh, c_sh, t_sh) = build_decode_step(
+                cfg, mesh, rules, spec)
+            p = jax.device_put(params, p_sh)
+            c = jax.device_put(init_cache(cfg, 4, 16), c_sh)
+            t = jax.device_put(tok, t_sh)
+            out, _ = jit_fn(p, c, t, jnp.int32(0))
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print("ERR", err)
+        assert err < 1e-2, err
+    """)
+    assert "ERR" in out
+
+
+def test_dryrun_entrypoint_smoke():
+    """The real dryrun module (512 devices) on the smallest arch/cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "smollm-135m", "--shape", "decode_32k", "--mesh", "multi",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[OK]" in r.stdout
+
+
+def test_elastic_restore_to_new_mesh():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.configs import reduced_config
+        from repro.models import init_model
+        from repro.parallel.sharding import make_rules, param_shardings
+        from repro.launch.mesh import make_mesh
+        from repro.launch.steps import model_shapes
+        from repro.train import checkpoint as ckpt
+
+        cfg = reduced_config("smollm-135m")
+        params, specs = init_model(cfg, jax.random.PRNGKey(0))
+        d = tempfile.mkdtemp()
+        ckpt.save(d, 3, params)
+
+        # restore onto a DIFFERENT mesh (simulates losing 4 of 8 hosts)
+        mesh = make_mesh((2, 2), ("data", "model"))
+        rules = make_rules(mesh)
+        shapes, specs2 = model_shapes(cfg)
+        sh = param_shardings(specs2, shapes, rules, mesh)
+        restored = ckpt.restore(d, 3, params, shardings=sh)
+        a = jax.tree_util.tree_leaves(params)[0]
+        b = jax.tree_util.tree_leaves(restored)[0]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out

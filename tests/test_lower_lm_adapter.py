@@ -1,0 +1,79 @@
+"""Tests for the LM lowering (core/lower_lm) and the TPU sharding planner
+(core/tpu_adapter)."""
+import math
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.configs.shapes import ShapeSpec
+from repro.core.lower_lm import lower_block
+from repro.core.tpu_adapter import (_factor_clip, make_tpu_pod_desc,
+                                    plan_cell, plan_workload,
+                                    trim_sharding_overrides)
+from repro.core.workload import matmul_workload
+
+
+def test_lowered_flops_track_active_params():
+    """2 x total_MACs of the FW lowering ~ 2*N_active*D within the
+    attention + capacity-factor envelope, for dense and MoE archs."""
+    for arch in ("smollm-135m", "phi3-mini-3.8b", "granite-moe-1b-a400m",
+                 "deepseek-v2-lite-16b", "mamba2-2.7b"):
+        cfg = get_config(arch)
+        spec = ShapeSpec("t", 4096, 8, "prefill")     # FW only
+        low = lower_block(cfg, spec)
+        flops = 2 * low.total_macs()
+        model = 2 * cfg.active_param_count() * 4096 * 8
+        ratio = flops / model
+        assert 0.8 <= ratio <= 3.0, (arch, ratio)
+
+
+def test_training_triples_matmul_work():
+    cfg = get_config("smollm-135m")
+    fw = lower_block(cfg, ShapeSpec("p", 1024, 4, "prefill")).total_macs()
+    tr = lower_block(cfg, ShapeSpec("t", 1024, 4, "train")).total_macs()
+    assert tr == pytest.approx(3 * fw)
+
+
+def test_decode_lowering_uses_kv_cache_length():
+    cfg = get_config("smollm-135m")
+    low = lower_block(cfg, SHAPES["decode_32k"])
+    scores = [w for w in low.workloads if w.name == "scores"]
+    assert scores and scores[0].dims[1] == 32768  # M = kv_len
+    # decode processes 1 token per sequence
+    q = [w for w in low.workloads if w.name == "q"][0]
+    assert q.dims[0] == SHAPES["decode_32k"].global_batch
+
+
+def test_factor_clip_divides():
+    assert _factor_clip(48, 16) == 16
+    assert _factor_clip(40, 16) == 10
+    assert _factor_clip(7, 16) == 7
+    assert _factor_clip(9, 4) == 3
+
+
+def test_planner_prefers_token_sharding_for_tall_matmuls():
+    # tall-skinny: tokens >> features => split N over the big data axis
+    wl = matmul_workload(rows=1 << 20, cols=4096, inner=4096, name="mlp")
+    best = plan_workload(wl, data_par=32, model_par=16)[0]
+    assert best.data_dim == "N"
+    assert best.model_dim in ("M", "C")
+
+
+def test_planner_cell_and_overrides():
+    cfg = get_config("nemotron-4-15b")
+    plans = plan_cell(cfg, SHAPES["train_4k"], data_par=32, model_par=16)
+    assert plans
+    import jax
+    mesh = jax.sharding.Mesh(
+        __import__("numpy").array(jax.devices()[:1]).reshape(1, 1),
+        ("data", "model"))
+    ov = trim_sharding_overrides(cfg, SHAPES["train_4k"], mesh)
+    assert isinstance(ov, dict)          # M-plan => {} (baseline TP)
+
+
+def test_tpu_pod_desc_is_valid_trim_hardware():
+    hw = make_tpu_pod_desc(256)
+    assert hw.compute.num_pes == 256
+    assert [lv.kind for lv in hw.levels] == ["memory", "routing", "memory",
+                                             "compute"]
+    assert hw.tiling_levels[1].fanout == 256

@@ -1,0 +1,103 @@
+"""Trip-count-aware HLO cost/collective parsing (launch/roofline.py).
+
+XLA's cost_analysis counts while bodies once; our parser must multiply by
+trip counts — validated here against known-FLOP programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (make_roofline, model_flops_estimate,
+                                   parse_collectives, parse_hlo_costs)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_trip_weighted():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+
+    def f(x, w):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=10)
+        return y
+
+    c = _compile(f, x, w)
+    got = parse_hlo_costs(c.as_text())
+    assert got["flops"] == pytest.approx(10 * 2 * 128 ** 3)
+    # XLA's own count misses the trip factor
+    assert c.cost_analysis().get("flops") < got["flops"]
+
+
+def test_nested_scan_flops():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+
+    def g(x, w):
+        def outer(c, _):
+            y, _ = jax.lax.scan(lambda d, _: (d @ w, None), c, None,
+                                length=4)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    got = parse_hlo_costs(_compile(g, x, w).as_text())
+    assert got["flops"] == pytest.approx(12 * 2 * 128 ** 3)
+
+
+def test_unrolled_matches_xla_cost_analysis():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+
+    def h(x, w):
+        for _ in range(5):
+            x = x @ w
+        return x
+
+    c = _compile(h, x, w)
+    got = parse_hlo_costs(c.as_text())
+    ca = c.cost_analysis()
+    assert got["flops"] == pytest.approx(ca.get("flops"))
+    assert got["bytes"] == pytest.approx(ca.get("bytes accessed"), rel=0.05)
+
+
+def test_collective_parse_shapes_and_groups():
+    hlo = """
+ENTRY %main.1 (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ar = f32[16,16]{1,0} all-reduce(%p), replica_groups=[4,8]<=[32], to_apply=%add
+  ROOT %ag = bf16[64,16]{1,0} all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+    st = parse_collectives(hlo, 32)
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["all-gather"] == 1
+    # all-reduce: 2 * 1024B * 7/8 ; all-gather: 2048B * 3/4
+    assert st.transfer_bytes["all-reduce"] == pytest.approx(
+        2 * 16 * 16 * 4 * 7 / 8)
+    assert st.transfer_bytes["all-gather"] == pytest.approx(
+        64 * 16 * 2 * 3 / 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = make_roofline(flops_per_device=197e12, bytes_per_device=819e9 * 2,
+                      collective_bytes=50e9 * 0.5, model_flops=197e12 * 256,
+                      n_devices=256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_estimate_kinds():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config("smollm-135m")
+    tr = model_flops_estimate(cfg, SHAPES["train_4k"])
+    pf = model_flops_estimate(cfg, SHAPES["prefill_32k"])
+    dec = model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * cfg.active_param_count() * 4096 * 256)
+    assert pf == pytest.approx(2 * cfg.active_param_count() * 32768 * 32)
+    assert dec == pytest.approx(2 * cfg.active_param_count() * 128)

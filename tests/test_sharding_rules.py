@@ -1,0 +1,83 @@
+"""Unit tests for the logical-axis sharding resolver (parallel.sharding):
+ordered candidates, divisibility fallback, duplicate-axis dedup, rank
+mismatch handling."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import (ShardingRules, make_rules,
+                                     spec_to_pspec)
+
+
+class FakeMesh:
+    """Shape-only stand-in (spec_to_pspec needs axis sizes, not devices)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+RULES = ShardingRules(mesh_axes=("data", "model"))
+RULES3 = ShardingRules(mesh_axes=("pod", "data", "model"))
+
+
+def test_param_2d_sharding():
+    # [d_model, d_ff]: embed -> data, ff -> model
+    spec = spec_to_pspec(("embed", "ff"), (4096, 16384), RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    # vocab 49155 % 16 != 0 -> replicated
+    spec = spec_to_pspec(("vocab", None), (49155, 1024), RULES, MESH)
+    assert spec == P()
+
+
+def test_duplicate_axis_dedup():
+    # batch takes data; kv_seq falls to its next candidate (model);
+    # kv_heads then finds model taken -> None
+    spec = spec_to_pspec(("batch", "kv_seq", "kv_heads", None),
+                         (128, 32768, 32, 128), RULES, MESH)
+    assert spec == P("data", "model")
+
+
+def test_kv_seq_candidate_order_prefers_data():
+    # batch=1 is indivisible -> data is free -> kv_seq takes data and
+    # kv_heads still gets model
+    spec = spec_to_pspec(("batch", "kv_seq", "kv_heads", None),
+                         (1, 524288, 32, 80), RULES, MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_multipod_batch_axes():
+    spec = spec_to_pspec(("batch", "seq"), (256, 4096), RULES3, MESH3)
+    assert spec[0] == ("pod", "data")
+
+
+def test_seq_megatron_sp_over_model():
+    spec = spec_to_pspec(("batch", "seq", "embed"), (256, 4096, 6144),
+                         RULES, MESH)
+    # block-boundary activations: batch->data, seq->model (Megatron SP)
+    assert spec == P("data", "model")
+
+
+def test_rank_mismatch_trailing_alignment():
+    # flattened [T, d] call site with a 3-name spec keeps the trailing dims
+    spec = spec_to_pspec(("batch", "seq", "ff"), (8192, 512), RULES, MESH)
+    assert len(spec) <= 2
+
+
+def test_overrides_win():
+    rules = ShardingRules(mesh_axes=("data", "model"),
+                          table={"ff": None, "embed": "model"})
+    spec = spec_to_pspec(("embed", "ff"), (4096, 16384), rules, MESH)
+    assert spec == P("model")
+
+
+def test_moe_cap_takes_data():
+    spec = spec_to_pspec(("experts", "moe_cap", None), (64, 61440, 2048),
+                         RULES, MESH)
+    assert spec == P("model", "data")

@@ -1,0 +1,91 @@
+"""End-to-end behaviour tests for the whole system (paper pipeline +
+framework driver)."""
+import numpy as np
+import pytest
+
+from repro.core import (MapperConfig, alexnet_cifar, analyze, explore,
+                        generate_arch_space)
+
+
+def test_trim_explorer_end_to_end():
+    """Paper Algorithm 1 on a small space: exploration returns a coherent
+    optimum whose goal value is minimal across evaluated architectures."""
+    task = alexnet_cifar(batch_size=2)
+    space = list(generate_arch_space(num_pes=(16, 64), rf_words=(64,),
+                                     gbuf_words=(8 * 1024,), bits=16))
+    cfg = MapperConfig(max_mappings=400, seed=0)
+    res = explore(task, space, goal="edp", cfg=cfg)
+    assert len(res.all_archs) == 2
+    vals = [a.network.edp for a in res.all_archs]
+    assert res.best.network.edp == min(vals)
+    # per-workload results cover the full 29-workload training schedule
+    assert len(res.best.per_workload) == 29
+    for wr in res.best.per_workload:
+        assert wr.estimate.cycles > 0
+        assert wr.estimate.energy_pj > 0
+        assert 0 < wr.mapping.spatial_used() <= 64
+
+
+def test_goal_changes_selection_pressure():
+    """Latency goal picks faster mappings than the energy goal (on the
+    same architecture)."""
+    from repro.core import evaluate_architecture, make_spatial_arch
+    task = alexnet_cifar(batch_size=2)
+    tw = analyze(task)
+    hw = make_spatial_arch(num_pes=64, rf_words=128, gbuf_words=16 * 1024,
+                           bits=16)
+    fast = evaluate_architecture(tw, hw, MapperConfig(max_mappings=500,
+                                                      seed=1),
+                                 goal="latency")
+    lean = evaluate_architecture(tw, hw, MapperConfig(max_mappings=500,
+                                                      seed=1),
+                                 goal="energy")
+    assert fast.network.cycles <= lean.network.cycles * 1.001
+    assert lean.network.energy_pj <= fast.network.energy_pj * 1.001
+
+
+def test_train_loop_end_to_end(tmp_path):
+    """The production driver trains, checkpoints, resumes, and reduces
+    loss on CPU (reduced config)."""
+    from repro.launch.train import train_loop
+    losses = train_loop(arch="smollm-135m", steps=16, seq_len=32,
+                        global_batch=4, reduced=True,
+                        ckpt_dir=str(tmp_path), log_every=50)
+    assert len(losses) == 16
+    assert losses[-1] < losses[0]
+    # resume: continues from step 16
+    more = train_loop(arch="smollm-135m", steps=20, seq_len=32,
+                      global_batch=4, reduced=True,
+                      ckpt_dir=str(tmp_path), log_every=50)
+    assert len(more) == 4  # steps 16..19 only
+
+
+def test_microbatched_grads_match_full_batch():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import reduced_config
+    from repro.models import init_model
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_step import (TrainConfig, TrainState,
+                                        make_train_step)
+    cfg = reduced_config("smollm-135m")
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab)}
+    opt = OptConfig()
+    outs = []
+    for mb in (1, 2, 4):
+        st = TrainState(params, init_opt_state(opt, params), None)
+        step = jax.jit(make_train_step(cfg, opt,
+                                       TrainConfig(remat="none",
+                                                   microbatches=mb)))
+        st2, m = step(st, batch)
+        outs.append((float(m["loss"]), st2.params))
+    l1, p1 = outs[0]
+    for l, p in outs[1:]:
+        assert abs(l - l1) / abs(l1) < 1e-3
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree_util.tree_leaves(p1),
+                                jax.tree_util.tree_leaves(p)))
+        assert d < 5e-3, d

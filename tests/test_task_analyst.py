@@ -1,0 +1,95 @@
+"""Task-analyst unit tests: workload counts and lowering (paper §3)."""
+import math
+
+import pytest
+
+from repro.core import (alexnet_cifar, alexnet_imagenet, analyze,
+                        resnet20_cifar, vgg11)
+from repro.core.task_analyst import Conv2D, FC, Pool2D, TaskDescription
+
+
+def test_alexnet_workload_counts():
+    # Paper §3.1: 5 CONV + 3 FC + 3 POOL => 11 inference workloads and
+    # (5+3)*3 + 3*2 - 1 = 29 training workloads.
+    t = alexnet_imagenet(batch_size=64)
+    assert len(analyze(t).intra) == 29
+    ti = alexnet_imagenet(batch_size=64, processing="Inference")
+    assert len(analyze(ti).intra) == 11
+
+
+def test_first_layer_has_no_bw():
+    t = alexnet_imagenet(batch_size=8)
+    phases = [(w.layer, w.phase) for w in analyze(t).intra]
+    assert ("conv1", "BW") not in phases
+    assert ("conv1", "WG") in phases
+    assert ("conv2", "BW") in phases
+
+
+def test_pool_has_no_wg():
+    t = alexnet_imagenet(batch_size=8)
+    phases = [(w.layer, w.phase) for w in analyze(t).intra]
+    assert ("pool1", "WG") not in phases
+    assert ("pool1", "BW") in phases
+
+
+def test_fw_conv_shapes():
+    t = alexnet_imagenet(batch_size=64)
+    w = analyze(t).intra[0]
+    # conv1: 224x224x3 -> 55x55x64, k=11, s=4, p=2
+    assert w.dims == (64, 64, 3, 11, 11, 55, 55)
+    assert w.output_shape == (64, 55, 55, 64)
+    assert w.input_shape[3] == 3
+
+
+def test_training_macs_conservation():
+    # BW macs == FW macs (same operands transposed); WG macs >= FW macs
+    # (dense upsampled representation keeps the zeros as work).
+    t = TaskDescription(name="t", input_shape=(16, 16, 4), batch_size=2,
+                        layers=(Conv2D(8, (3, 3), (1, 1), (1, 1)),
+                                Conv2D(8, (3, 3), (1, 1), (1, 1))))
+    wls = analyze(t).intra
+    fw = {w.layer: w for w in wls if w.phase == "FW"}
+    bw = {w.layer: w for w in wls if w.phase == "BW"}
+    wg = {w.layer: w for w in wls if w.phase == "WG"}
+    assert bw["L2"].macs == fw["L2"].macs
+    assert wg["L2"].macs >= fw["L2"].macs
+
+
+def test_wg_dense_upsampling_zero_fraction():
+    # stride-2 conv: upsampled dy holds E*F values in ((E-1)*2+1)^2 slots.
+    t = TaskDescription(name="t", input_shape=(16, 16, 4), batch_size=2,
+                        layers=(Conv2D(8, (3, 3), (1, 1), (1, 1)),
+                                Conv2D(8, (3, 3), (2, 2), (1, 1))))
+    wg = [w for w in analyze(t).intra if w.phase == "WG" and w.layer == "L2"]
+    assert len(wg) == 1
+    w = wg[0]
+    e = f = 8  # 16/2
+    p_up = (e - 1) * 2 + 1
+    want = 1.0 - (e * f) / (p_up * p_up)
+    assert abs(w.weight_zero_frac - want) < 1e-9
+
+
+def test_activation_liveness_spans_fw_to_wg():
+    t = alexnet_cifar(batch_size=4)
+    tw = analyze(t)
+    assert len(tw.activations) == 8  # conv+fc layers with WG
+    for a in tw.activations:
+        assert 0 <= a.created < a.freed <= len(tw.intra)
+
+
+def test_preproc_padding_only_when_padded():
+    t = TaskDescription(name="t", input_shape=(8, 8, 2), batch_size=1,
+                        processing_type="Inference",
+                        layers=(Conv2D(4, (3, 3), (1, 1), (0, 0)),
+                                Conv2D(4, (3, 3), (1, 1), (1, 1))))
+    tw = analyze(t)
+    assert len(tw.preproc) == 1
+    assert tw.preproc[0][1].op == "padding"
+
+
+def test_network_zoo_builds():
+    for t in (vgg11(batch_size=2), resnet20_cifar(batch_size=2)):
+        tw = analyze(t)
+        assert len(tw.intra) > 20
+        for w in tw.intra:
+            assert w.macs > 0
