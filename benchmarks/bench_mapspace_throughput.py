@@ -1,9 +1,12 @@
 """Beyond-paper: mapspace-evaluation throughput.
 
 The DSE bottleneck is scoring mappings.  Compares (a) the scalar Python
-evaluator (Timeloop-style), (b) the vectorized jnp batch evaluator, and
+evaluator (Timeloop-style), (b) the vectorized jnp batch evaluator,
 (c) the Pallas kernel in interpret mode (on TPU the same kernel runs on
-the VPU).  Reported as microseconds per mapping."""
+the VPU), and (d) cross-architecture fused batching
+(repro.search.batch_frontier): the mapspaces of several candidate
+architectures packed into one device call instead of one call per arch.
+Reported as microseconds per mapping."""
 from __future__ import annotations
 
 import time
@@ -43,14 +46,52 @@ def run(n=2000):
     mapspace_eval(ms, block=256, interpret=True)
     kernel_us = (time.time() - t0) * 1e6 / n
 
+    # (d) cross-arch fused batching vs one vectorized call per arch.
+    # Same workload, four architectures from the Designer lattice; the seed
+    # path packs + evaluates each arch separately, the fused path packs all
+    # four mapspaces into one evaluate_batch_multi call.
+    from repro.search.batch_frontier import MapspaceJob, fused_best
+    archs = [make_spatial_arch(num_pes=p, rf_words=r, gbuf_words=g,
+                               bits=16, zero_skip=True)
+             for p, r, g in ((256, 256, 64 * 1024), (256, 128, 128 * 1024),
+                             (512, 256, 64 * 1024), (512, 512, 128 * 1024))]
+    jobs = [MapspaceJob(tag=i, hw=a, workload=wl,
+                        mappings=build_mapspace(wl, a, cfg).mappings[:n])
+            for i, a in enumerate(archs)]
+    total = sum(len(j.mappings) for j in jobs)
+
+    def single_arch_pass():
+        for j in jobs:
+            st_j = make_static(j.hw, j.workload)
+            f_j, r_j, s_j = pack(j.mappings)
+            np.asarray(evaluate_batch(st_j, f_j, r_j, s_j)["edp"])
+
+    single_arch_pass()                   # compile all variants
+    fused_best(jobs, "edp")              # compile the fused variant
+    single_us = min(_timed(single_arch_pass) for _ in range(3)) * 1e6 / total
+    fused_us = min(_timed(lambda: fused_best(jobs, "edp"))
+                   for _ in range(3)) * 1e6 / total
+
     res = {"n": n, "scalar_us": scalar_us, "batch_us": batch_us,
            "kernel_interpret_us": kernel_us,
-           "speedup_batch": scalar_us / batch_us}
+           "speedup_batch": scalar_us / batch_us,
+           "cross_arch_n": total, "single_arch_us": single_us,
+           "fused_us": fused_us, "fused_speedup": single_us / fused_us}
     claim(res, "vectorized evaluator beats scalar by >10x",
           res["speedup_batch"] > 10,
           f"{scalar_us:.1f}us -> {batch_us:.2f}us per mapping "
           f"({res['speedup_batch']:.0f}x)")
+    claim(res, "cross-arch fused batching throughput >= single-arch path",
+          fused_us <= single_us,
+          f"{single_us:.2f}us -> {fused_us:.2f}us per mapping "
+          f"({res['fused_speedup']:.2f}x, {len(jobs)} archs fused)")
     return res
+
+
+def _timed(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0
 
 
 def rows(res):
@@ -60,4 +101,8 @@ def rows(res):
          f"speedup={res['speedup_batch']:.0f}x"),
         ("mapspace_pallas_interpret", res["kernel_interpret_us"],
          "interpret-mode (correctness path)"),
+        ("mapspace_single_arch", res["single_arch_us"],
+         f"4-arch loop, n={res['cross_arch_n']}"),
+        ("mapspace_cross_arch_fused", res["fused_us"],
+         f"speedup={res['fused_speedup']:.2f}x vs single-arch"),
     ]

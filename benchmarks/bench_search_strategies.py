@@ -1,0 +1,83 @@
+"""Beyond-paper: search-strategy shootout at equal evaluation budget.
+
+Runs every registered `repro.search` strategy over the paper's
+PEs x RF x Gbuf lattice (AlexNet-Cifar inference, lowest-EDP goal) with the
+same architecture-evaluation budget and records the best-EDP-vs-budget
+curve, so future PRs can track search-quality trajectories from the
+machine-readable JSON that benchmarks/run.py emits.  Also exercises the
+persistent result cache: strategies share one cache, and a warm exhaustive
+re-run must do zero mapspace enumerations.
+"""
+from __future__ import annotations
+
+from repro.core import MapperConfig
+from repro.core.task_analyst import NETWORKS
+from repro.search import ArchSpace, ResultCache, run_search
+
+from .common import Timer, claim
+
+LATTICE = dict(num_pes=(128, 256, 512), rf_words=(128, 256),
+               gbuf_words=(32 * 1024, 64 * 1024, 128 * 1024))
+STRATEGIES = ("exhaustive", "random", "anneal", "evolve")
+
+
+def run(max_mappings=800, budget=9, seed=0):
+    task = NETWORKS["alexnet-cifar"](batch_size=16, processing="Inference")
+    space = ArchSpace.spatial(bits=32, zero_skip=True, **LATTICE)
+    cfg = MapperConfig(max_mappings=max_mappings, seed=seed)
+    cache = ResultCache()
+    out = {"space_size": space.size, "budget": budget, "strategies": {}}
+
+    # full exhaustive sweep = ground-truth optimum (and warms the cache)
+    t = Timer()
+    full = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
+                      strategy="exhaustive", batching="fused", seed=seed)
+    out["optimum"] = {"arch": full.best.hardware.name,
+                      "edp": full.goal_value(),
+                      "us": t.us(), "n_enumerations": full.n_enumerations}
+
+    for name in STRATEGIES:
+        t = Timer()
+        rep = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
+                         strategy=name, budget=budget, batching="fused",
+                         seed=seed)
+        out["strategies"][name] = {
+            "best_arch": rep.best.hardware.name, "best_edp": rep.goal_value(),
+            "n_evaluated": rep.n_evaluated, "n_revisits": rep.n_revisits,
+            "n_enumerations": rep.n_enumerations,
+            "best_curve": rep.best_curve(), "us": t.us(),
+            "pareto": rep.pareto.summary(),
+        }
+
+    opt = out["optimum"]["edp"]
+    for name, r in out["strategies"].items():
+        claim(out, f"{name} respects the evaluation budget",
+              r["n_evaluated"] <= budget,
+              f"{r['n_evaluated']}/{budget} evals")
+        claim(out, f"{name} best-EDP curve is monotone non-increasing",
+              all(a >= b for a, b in zip(r["best_curve"],
+                                         r["best_curve"][1:])),
+              f"curve={['%.3e' % v for v in r['best_curve']]}")
+    gaps = {n: r["best_edp"] / opt for n, r in out["strategies"].items()}
+    out["gap_vs_optimum"] = gaps
+    claim(out, "every strategy reaches <= 1.5x the global-optimum EDP at "
+          "half-space budget (seeded, deterministic)",
+          all(g <= 1.5 for g in gaps.values()),
+          "; ".join(f"{n}={g:.3f}x" for n, g in gaps.items()))
+    claim(out, "warm cache: budgeted re-runs enumerate zero mapspaces",
+          all(r["n_enumerations"] == 0 for r in out["strategies"].values()),
+          f"enumerations="
+          f"{[r['n_enumerations'] for r in out['strategies'].values()]}")
+    return out
+
+
+def rows(res):
+    r = [("search_exhaustive_full", res["optimum"]["us"],
+          f"optimum={res['optimum']['edp']:.3e};"
+          f"enums={res['optimum']['n_enumerations']}")]
+    for name, s in res["strategies"].items():
+        r.append((f"search_{name}_b{res['budget']}", s["us"],
+                  f"best={s['best_edp']:.3e};"
+                  f"gap={res['gap_vs_optimum'][name]:.3f}x;"
+                  f"evals={s['n_evaluated']}"))
+    return r

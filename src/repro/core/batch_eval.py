@@ -400,6 +400,313 @@ def _bucket(n: int) -> int:
     return b
 
 
+bucket = _bucket
+
+
+# ---------------------------------------------------------------------------
+# Multi-architecture fused batches (repro.search.batch_frontier).
+#
+# `evaluate_batch` bakes every hardware constant into the jit closure via the
+# static HwStatic, so each (arch, workload) pair compiles and dispatches its
+# own program.  For cross-architecture DSE the numeric constants (capacities,
+# bandwidths, energies, workload bounds) become per-mapping *arrays* instead,
+# and only the structural shape of the evaluation — level layout, tensor set,
+# depthwise semantics — stays static.  Mapspaces of any two architectures
+# sharing a BatchSig then pack into a single device call.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchSig:
+    """Structural signature of an evaluation: everything `evaluate_batch`
+    uses for control flow / array shapes, nothing it uses as a number."""
+    n_levels: int
+    mem_idx: Tuple[int, ...]
+    rout_idx: Tuple[int, ...]
+    depthwise: bool
+    has_weight: bool
+
+
+def sig_of(st: HwStatic) -> BatchSig:
+    return BatchSig(n_levels=st.n_levels, mem_idx=st.mem_idx,
+                    rout_idx=st.rout_idx, depthwise=st.depthwise,
+                    has_weight=st.has_weight)
+
+
+def params_of(st: HwStatic, n: int):
+    """Numeric side of `st`, broadcast to [n, ...] arrays (one row per
+    mapping) so fused batches can mix architectures and workloads."""
+    rep = lambda v: np.broadcast_to(np.asarray(v, np.float32), (n,) +
+                                    np.asarray(v, np.float32).shape).copy()
+    return {
+        "sizes": rep(st.sizes), "bandwidths": rep(st.bandwidths),
+        "read_e": rep(st.read_e), "write_e": rep(st.write_e),
+        "leak": rep(st.leak),
+        "fanout": rep([float(f) for f in st.fanout]),
+        "noc_bw": rep(st.noc_bw), "uni_e": rep(st.uni_e),
+        "multi_e": rep(st.multi_e), "acc_e": rep(st.acc_e),
+        "macs_per_pe": rep(float(st.macs_per_pe)),
+        "pipeline": rep(float(st.pipeline)), "mac_e": rep(st.mac_e),
+        "pe_leak_total": rep(st.pe_leak * st.num_pes),
+        "zs_boundary": np.full((n,), st.zs_boundary, np.int32),
+        "macs": rep(float(math.prod(st.dims))),
+        "stride": rep([float(s) for s in st.stride]),
+        "dilation": rep([float(d) for d in st.dilation]),
+        "in_zf": rep(st.in_zf), "w_zf": rep(st.w_zf),
+    }
+
+
+def _tile_words_b(sig: BatchSig, stride, dilation, tile):
+    """tile: [B, 7] -> dict tensor -> [B] words; stride/dilation [B, 2]."""
+    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
+    u, v = stride[:, 0], stride[:, 1]
+    dr, ds = dilation[:, 0], dilation[:, 1]
+    p = (e - 1) * u + (r - 1) * dr + 1
+    q = (f - 1) * v + (s - 1) * ds + 1
+    return {
+        "input": n * c * p * q,
+        "weight": (r * s * c * m) if sig.has_weight else jnp.zeros_like(n),
+        "output": n * e * f * (c if sig.depthwise else m),
+    }
+
+
+def _fresh_input_words_b(stride, dilation, tile, slide_dim):
+    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
+    u, v = stride[:, 0], stride[:, 1]
+    dr, ds = dilation[:, 0], dilation[:, 1]
+    p = (e - 1) * u + (r - 1) * dr + 1
+    q = (f - 1) * v + (s - 1) * ds + 1
+    fr_e = n * c * jnp.minimum(p, e * u) * q
+    fr_f = n * c * p * jnp.minimum(q, f * v)
+    fr_r = n * c * jnp.minimum(p, r * dr) * q
+    fr_s = n * c * p * jnp.minimum(q, s * ds)
+    return jnp.where(slide_dim == E_, fr_e,
+                     jnp.where(slide_dim == F_, fr_f,
+                               jnp.where(slide_dim == R_, fr_r, fr_s)))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def evaluate_batch_multi(sig: BatchSig, params, factors, rank, store):
+    """`evaluate_batch` with per-mapping hardware/workload constants.
+
+    Semantics match `evaluate_batch` row-for-row when every row carries the
+    same architecture (asserted by tests/test_search.py); rows may mix any
+    architectures/workloads that share `sig`.
+    """
+    B, L, _ = factors.shape
+    f32 = factors.astype(jnp.float64 if jax.config.jax_enable_x64
+                         else jnp.float32)
+    cast = lambda k: params[k].astype(f32.dtype)
+    sizes, bandwidths = cast("sizes"), cast("bandwidths")
+    read_e, write_e, leak = cast("read_e"), cast("write_e"), cast("leak")
+    fanout, noc_bw = cast("fanout"), cast("noc_bw")
+    uni_e, multi_e, acc_e = cast("uni_e"), cast("multi_e"), cast("acc_e")
+    stride, dilation = cast("stride"), cast("dilation")
+    macs, mac_e = cast("macs"), cast("mac_e")
+    zs_b = params["zs_boundary"]
+    mem = list(sig.mem_idx)
+    Lm = len(mem)
+
+    rev = jnp.flip(f32, axis=1)
+    tile_at = jnp.flip(jnp.cumprod(rev, axis=1), axis=1)
+    tile_at = jnp.concatenate([tile_at, jnp.ones((B, 1, 7), f32.dtype)],
+                              axis=1)
+
+    n_slots = Lm * 7
+    slot_bound = jnp.ones((B, n_slots), f32.dtype)
+    slot_dim = jnp.zeros((B, n_slots), jnp.int32)
+    for j, li in enumerate(mem):
+        pos = rank[:, li, :]
+        idx = j * 7 + pos
+        slot_bound = jax.vmap(lambda sb, ix, fv: sb.at[ix].set(fv))(
+            slot_bound, idx, f32[:, li, :])
+        slot_dim = jax.vmap(lambda sd, ix: sd.at[ix].set(
+            jnp.arange(7, dtype=jnp.int32)))(slot_dim, idx)
+    active = slot_bound > 1.0
+    cum = jnp.cumprod(slot_bound, axis=1)
+
+    rel_t = {t: jnp.asarray(RELEVANT[t]) for t in TENSORS}
+    if sig.depthwise:
+        rel_t["output"] = jnp.asarray(np.array([1, 1, 1, 0, 0, 1, 1], bool))
+    sliding = jnp.asarray(SLIDING)
+
+    rout = list(sig.rout_idx)
+    rout_prod = [jnp.prod(f32[:, r, :], axis=1) for r in rout]
+
+    def inst_before(tiling_idx_arr):
+        inst = jnp.ones((B,), f32.dtype)
+        for ri, r in enumerate(rout):
+            inst = inst * jnp.where(tiling_idx_arr > r, rout_prod[ri], 1.0)
+        return inst
+
+    def spatial_between(parent_tiling, child_tiling_static):
+        S = jnp.ones((B, 7), f32.dtype)
+        for ri, r in enumerate(rout):
+            if r < child_tiling_static:
+                m = (parent_tiling < r)[:, None]
+                S = S * jnp.where(m, f32[:, r, :], 1.0)
+        return S
+
+    def scan_pair(child_j, tensor, parent_tiling):
+        if child_j == Lm:
+            per_inst = jnp.ones((B, 7), f32.dtype)
+            child_tiling = sig.n_levels
+            n_vis = n_slots
+        else:
+            per_inst = tile_at[:, mem[child_j]]
+            child_tiling = mem[child_j]
+            n_vis = child_j * 7
+        S = spatial_between(parent_tiling, child_tiling)
+        union = per_inst * S
+        pw = _tile_words_b(sig, stride, dilation, per_inst)[tensor]
+        uw = _tile_words_b(sig, stride, dilation, union)[tensor]
+        i_a = inst_before(parent_tiling)
+        i_b = inst_before(jnp.full((B,), child_tiling))
+        zero = jnp.zeros((B,), f32.dtype)
+        if n_vis == 0:
+            V = jnp.ones((B,), f32.dtype)
+            D = V
+            union_words = uw
+            has = jnp.zeros((B,), bool)
+        else:
+            rel = rel_t[tensor][slot_dim[:, :n_vis]] & active[:, :n_vis]
+            pos = jnp.arange(1, n_vis + 1)
+            k1 = jnp.max(jnp.where(rel, pos, 0), axis=1)
+            has = k1 > 0
+            kidx = jnp.maximum(k1 - 1, 0)
+            P_k = jnp.take_along_axis(cum[:, :n_vis], kidx[:, None],
+                                      axis=1)[:, 0]
+            b_k = jnp.take_along_axis(slot_bound[:, :n_vis], kidx[:, None],
+                                      axis=1)[:, 0]
+            d_k = jnp.take_along_axis(slot_dim[:, :n_vis], kidx[:, None],
+                                      axis=1)[:, 0]
+            outer = P_k / b_k
+            V = jnp.where(has, P_k, 1.0)
+            relb = rel & (pos[None, :] <= k1[:, None])
+            D = jnp.prod(jnp.where(relb, slot_bound[:, :n_vis], 1.0), axis=1)
+            D = jnp.where(has, D, 1.0)
+            union_words = V * uw
+            if tensor == "input" and child_j != Lm:
+                fresh = _fresh_input_words_b(stride, dilation, union, d_k)
+                slid = outer * (uw + (b_k - 1) * fresh)
+                union_words = jnp.where(has & sliding[d_k], slid,
+                                        union_words)
+        if tensor == "output":
+            return {"parent_read": i_a * (V - D) * uw,
+                    "parent_write": i_a * V * uw,
+                    "child_read": zero if child_j == Lm else i_b * V * pw,
+                    "child_write": zero if child_j == Lm
+                    else i_b * (V - D) * pw,
+                    "noc": i_b * (2 * V - D) * pw}
+        return {"parent_read": i_a * union_words,
+                "parent_write": zero,
+                "child_read": zero,
+                "child_write": zero if child_j == Lm else i_b * V * pw,
+                "noc": i_a * union_words}
+
+    reads = [jnp.zeros((B,), f32.dtype) for _ in range(Lm)]
+    writes = [jnp.zeros((B,), f32.dtype) for _ in range(Lm)]
+    raw = [jnp.zeros((B,), f32.dtype) for _ in range(Lm)]
+    n_r = len(rout)
+    uni = jnp.zeros((B,), f32.dtype)
+    multi = jnp.zeros((B,), f32.dtype)
+    acc = jnp.zeros((B,), f32.dtype)
+    noc_raw = jnp.zeros((B,), f32.dtype)
+    spatial = [f32[:, r, :] for r in rout]
+    m_w = [jnp.any(s[:, jnp.asarray([N_, E_, F_])] > 1, axis=1)
+           for s in spatial]
+    m_i = [spatial[i][:, M_] > 1 for i in range(n_r)]
+    a_o = [jnp.any(s[:, jnp.asarray([C_, R_, S_])] > 1, axis=1)
+           for s in spatial]
+
+    one = jnp.ones((B,), f32.dtype)
+    zf = {"input": 1.0 - cast("in_zf"),
+          "weight": (1.0 - cast("w_zf")) if sig.has_weight else one,
+          "output": one}
+
+    tensors = ["input", "output"] + (["weight"] if sig.has_weight else [])
+    for ti, tensor in enumerate(TENSORS):
+        if tensor not in tensors:
+            continue
+        st_flag = store[:, :, ti]
+        for child_j in list(range(1, Lm)) + [Lm]:
+            if child_j < Lm:
+                stores_child = st_flag[:, child_j]
+            else:
+                stores_child = jnp.ones((B,), bool)
+            cand = st_flag[:, :child_j]
+            ppos = jnp.max(jnp.where(cand,
+                                     jnp.arange(child_j)[None, :], 0),
+                           axis=1)
+            parent_tiling = jnp.asarray(mem)[ppos]
+            stats = scan_pair(child_j, tensor, parent_tiling)
+            zs_f = jnp.where(
+                (zs_b >= 0) & (parent_tiling >= zs_b)
+                & (tensor != "output"), zf[tensor], 1.0)
+            gate0 = stores_child.astype(f32.dtype)
+            gate = gate0 * zs_f
+            for j in range(Lm):
+                sel = (ppos == j).astype(f32.dtype)
+                reads[j] = reads[j] + sel * gate * stats["parent_read"]
+                writes[j] = writes[j] + sel * gate * stats["parent_write"]
+                raw[j] = raw[j] + sel * gate0 * (stats["parent_read"]
+                                                 + stats["parent_write"])
+            if child_j < Lm:
+                writes[child_j] = writes[child_j] \
+                    + gate * stats["child_write"]
+                reads[child_j] = reads[child_j] + gate * stats["child_read"]
+                raw[child_j] = raw[child_j] + gate0 * (
+                    stats["child_write"] + stats["child_read"])
+            child_tiling = (mem[child_j] if child_j < Lm else sig.n_levels)
+            w = gate * stats["noc"]
+            w_raw = gate0 * stats["noc"]
+            for ri, r in enumerate(rout):
+                crosses = (parent_tiling < r) & (r < child_tiling)
+                wc = jnp.where(crosses, w, 0.0)
+                noc_raw = noc_raw + jnp.where(crosses, w_raw, 0.0)
+                if tensor == "weight":
+                    uni = uni + jnp.where(m_w[ri], 0.0, wc)
+                    multi = multi + jnp.where(m_w[ri], wc, 0.0)
+                elif tensor == "input":
+                    uni = uni + jnp.where(m_i[ri], 0.0, wc)
+                    multi = multi + jnp.where(m_i[ri], wc, 0.0)
+                else:
+                    uni = uni + jnp.where(a_o[ri], 0.0, wc)
+                    acc = acc + jnp.where(a_o[ri], wc, 0.0)
+
+    pes_used = jnp.prod(jnp.stack([jnp.prod(s, axis=1) for s in spatial],
+                                  axis=0), axis=0) if spatial else \
+        jnp.ones((B,), f32.dtype)
+    comp_cycles = macs / (jnp.maximum(pes_used, 1.0)
+                          * cast("macs_per_pe") * cast("pipeline"))
+    cycles = comp_cycles
+    dyn = macs * jnp.where(zs_b >= 0, zf["input"] * zf["weight"], 1.0) * mac_e
+    leak_rate = cast("pe_leak_total")
+    for j in range(Lm):
+        inst_j = inst_before(jnp.full((B,), mem[j]))
+        cycles = jnp.maximum(cycles, raw[j] / (bandwidths[:, j] * inst_j))
+        dyn = dyn + reads[j] * read_e[:, j] + writes[j] * write_e[:, j]
+        leak_rate = leak_rate + leak[:, j]
+    for ri in range(n_r):
+        cycles = jnp.maximum(cycles, noc_raw / noc_bw[:, ri])
+        dyn = dyn + (uni * uni_e[:, ri] + multi * multi_e[:, ri]
+                     + acc * acc_e[:, ri])
+    static = leak_rate * cycles
+    energy = dyn + static
+
+    valid = jnp.ones((B,), bool)
+    for ri, r in enumerate(rout):
+        valid &= jnp.prod(f32[:, r, :], axis=1) <= fanout[:, ri]
+    for j, li in enumerate(mem):
+        tw = _tile_words_b(sig, stride, dilation, tile_at[:, li])
+        used = jnp.zeros((B,), f32.dtype)
+        for ti, t in enumerate(TENSORS):
+            used = used + jnp.where(store[:, j, ti], tw[t], 0.0)
+        valid &= used <= sizes[:, j]
+
+    return {"cycles": cycles, "dynamic_pj": dyn, "static_pj": static,
+            "energy_pj": energy, "edp": cycles * energy, "valid": valid,
+            "pes_used": pes_used}
+
+
 def batch_scores(mappings: Sequence[Mapping], goal: str = "edp"):
     st = make_static(mappings[0].hardware, mappings[0].workload)
     factors, rank, store = pack(mappings)

@@ -131,20 +131,18 @@ def explore(task: TaskDescription, arch_space: Iterable[HardwareDesc],
             goal: str = "edp", cfg: Optional[MapperConfig] = None,
             cache_level: str = "Gbuf", use_batch: bool = True,
             verbose: bool = False) -> ExplorationResult:
-    """Paper Algorithm 1 — full design-space exploration."""
-    cfg = cfg or MapperConfig()
-    workloads = analyze(task)
-    all_archs: List[ArchResult] = []
-    best: Optional[ArchResult] = None
-    for hw in arch_space:
-        res = evaluate_architecture(workloads, hw, cfg, goal, cache_level,
-                                    use_batch)
-        all_archs.append(res)
-        if best is None or res.goal_value(goal) < best.goal_value(goal):
-            best = res
-        if verbose:
-            n = res.network
-            print(f"  {hw.name:28s} cycles={n.cycles:.3e} "
-                  f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}")
-    assert best is not None, "empty architecture space"
-    return ExplorationResult(best=best, all_archs=all_archs, goal=goal)
+    """Paper Algorithm 1 — full design-space exploration.
+
+    Thin compatibility wrapper over `repro.search.run_search` with the
+    exhaustive strategy and the seed per-(arch, workload) evaluation path;
+    `repro.search` adds budgeted strategies (random/anneal/evolve),
+    Pareto-frontier objectives, cross-architecture batching and a
+    persistent result cache on the same machinery.
+    """
+    from ..search.driver import run_search
+    report = run_search(task, list(arch_space), goal=goal, cfg=cfg,
+                        cache_level=cache_level, use_batch=use_batch,
+                        strategy="exhaustive", batching="per-arch",
+                        verbose=verbose)
+    return ExplorationResult(best=report.best, all_archs=report.all_archs,
+                             goal=goal)

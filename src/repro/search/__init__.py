@@ -1,0 +1,25 @@
+"""repro.search — pluggable multi-objective DSE search engine.
+
+Layers on top of repro.core's Algorithm-1 machinery:
+
+  space          ArchSpace lattice over architecture parameters
+  strategies     Strategy registry: exhaustive | random | anneal | evolve
+  pareto         ParetoFront over (cycles, energy, area[, edp])
+  cache          persistent content-addressed mapspace-result cache
+  batch_frontier cross-architecture fused mapspace evaluation
+  driver         run_search orchestration -> SearchReport
+
+`core.explorer.explore` is a thin compatibility wrapper over
+`run_search(strategy="exhaustive")`.
+"""
+from .batch_frontier import JobBest, MapspaceJob, fused_best, per_arch_best
+from .cache import ResultCache, cache_key, decode_result, encode_result
+from .driver import SearchReport, run_search
+from .pareto import (DEFAULT_OBJECTIVES, OBJECTIVES, ParetoFront,
+                     ParetoPoint, dominates, objective_values, scalarize)
+from .space import ArchSpace, as_space
+from .strategies import (STRATEGIES, AnnealStrategy, EvolveStrategy,
+                         ExhaustiveStrategy, RandomStrategy, Strategy,
+                         make_strategy, register)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

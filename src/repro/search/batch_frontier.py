@@ -1,0 +1,151 @@
+"""Cross-architecture batched mapspace evaluation.
+
+The seed hot path dispatches one vectorized `core.batch_eval` call per
+(architecture, workload) pair; a DSE round evaluating many candidate
+architectures pays per-call dispatch + padding overhead dozens of times
+over.  Here all pending (arch, workload) mapspaces of a round are grouped
+by their structural `BatchSig` — identical level layout / tensor set, the
+only things the fused evaluator needs static — and each group is packed
+into a single `evaluate_batch_multi` device call with per-mapping hardware
+constants.  Every architecture from one Designer template (e.g. the paper's
+PEs x RF x Gbuf lattice) shares one signature, so a whole round usually
+fuses into one call per workload *shape family*, not per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.batch_eval import (bucket, evaluate_batch_multi, make_static,
+                               pack, params_of, sig_of)
+from ..core.designer import HardwareDesc
+from ..core.mapping import Mapping
+from ..core.workload import Workload
+
+GOAL_KEY = {"latency": "cycles", "energy": "energy_pj", "edp": "edp"}
+
+
+@dataclasses.dataclass
+class MapspaceJob:
+    """One pending mapspace search: pick the goal-best mapping of
+    `mappings` (all on the same hw/workload)."""
+    tag: object                       # caller identity, returned with result
+    hw: HardwareDesc
+    workload: Workload
+    mappings: List[Mapping]
+
+
+@dataclasses.dataclass
+class JobBest:
+    tag: object
+    index: int                        # argmin into job.mappings
+    value: float                      # goal score of the winner (f32 path)
+    n_scored: int
+
+
+def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
+               max_group: int = 65536) -> List[JobBest]:
+    """Goal-best mapping index per job, fusing jobs across architectures.
+
+    Jobs are grouped by BatchSig; each group evaluates as one
+    `evaluate_batch_multi` call (split if it would exceed `max_group`
+    rows).  Selection semantics match `batch_eval.batch_best_index` per
+    job: invalid mappings score +inf, ties break to the lowest index.
+    """
+    key = GOAL_KEY[goal]
+    groups: Dict[object, List[int]] = {}
+    statics = []
+    for i, job in enumerate(jobs):
+        if not job.mappings:
+            raise ValueError(f"job {job.tag!r}: empty mapping list")
+        st = make_static(job.hw, job.workload)
+        statics.append(st)
+        groups.setdefault(sig_of(st), []).append(i)
+
+    out: List[Optional[JobBest]] = [None] * len(jobs)
+    for sig, idxs in groups.items():
+        # split oversized groups so padding/bucketing stays bounded
+        chunks: List[List[int]] = [[]]
+        rows = 0
+        for i in idxs:
+            n = len(jobs[i].mappings)
+            if chunks[-1] and rows + n > max_group:
+                chunks.append([])
+                rows = 0
+            chunks[-1].append(i)
+            rows += n
+        for chunk in chunks:
+            _eval_group(sig, chunk, jobs, statics, key, out)
+    return [b for b in out if b is not None]
+
+
+def _eval_group(sig, idxs: List[int], jobs, statics, key: str,
+                out: List[Optional[JobBest]]) -> None:
+    import jax.numpy as jnp
+
+    counts = [len(jobs[i].mappings) for i in idxs]
+    packed = [pack(jobs[i].mappings) for i in idxs]
+    factors = np.concatenate([np.asarray(p[0]) for p in packed])
+    rank = np.concatenate([np.asarray(p[1]) for p in packed])
+    store = np.concatenate([np.asarray(p[2]) for p in packed])
+    params = {}
+    per_job = [params_of(statics[i], n) for i, n in zip(idxs, counts)]
+    for name in per_job[0]:
+        params[name] = np.concatenate([p[name] for p in per_job])
+
+    n = factors.shape[0]
+    pad = bucket(n) - n
+    if pad:
+        rep = lambda a: np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+        factors, rank, store = rep(factors), rep(rank), rep(store)
+        params = {k: rep(v) for k, v in params.items()}
+
+    res = evaluate_batch_multi(sig, {k: jnp.asarray(v)
+                                     for k, v in params.items()},
+                               jnp.asarray(factors), jnp.asarray(rank),
+                               jnp.asarray(store))
+    scores = np.asarray(res[key][:n])
+    valid = np.asarray(res["valid"][:n])
+    scores = np.where(valid, scores, np.inf)
+
+    off = 0
+    for i, cnt in zip(idxs, counts):
+        seg = scores[off: off + cnt]
+        best = int(np.argmin(seg))
+        out[i] = JobBest(tag=jobs[i].tag, index=best,
+                         value=float(seg[best]), n_scored=cnt)
+        off += cnt
+
+
+def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
+                  use_batch: bool = True) -> List[JobBest]:
+    """Seed-semantics fallback: one `batch_best_index` (or scalar loop)
+    per job — exactly the explorer's `find_optimal_mapping` selection."""
+    import math as _math
+
+    from ..core.batch_eval import batch_best_index
+    from ..core.evaluator import evaluate_mapping
+    from ..core.explorer import GOALS
+
+    score = GOALS[goal]
+    out: List[JobBest] = []
+    for job in jobs:
+        best_i = None
+        if use_batch and len(job.mappings) >= 64:
+            try:
+                best_i = batch_best_index(job.mappings, goal)
+                best_v = score(evaluate_mapping(job.mappings[best_i]))
+            except Exception:
+                best_i = None
+        if best_i is None:
+            best_v = _math.inf
+            best_i = 0
+            for i, m in enumerate(job.mappings):
+                v = score(evaluate_mapping(m))
+                if v < best_v:
+                    best_i, best_v = i, v
+        out.append(JobBest(tag=job.tag, index=best_i, value=best_v,
+                           n_scored=len(job.mappings)))
+    return out

@@ -1,0 +1,189 @@
+"""Persistent, content-addressed result cache for mapspace searches.
+
+The dominant DSE cost is enumerating + scoring a workload's mapspace.  The
+same (workload, hardware, mapper config, goal) query recurs constantly:
+repeated layers inside one network, identical conv/matmul shapes across
+networks, and revisited architectures across search iterations.  The cache
+keys queries by a sha256 over a canonical JSON encoding of all four
+components and stores the winning mapping plus its estimate, in two tiers:
+
+  * memory — LRU dict, per-process, zero-cost hits;
+  * disk   — one JSON file per key under a cache directory, surviving
+    process restarts (a fresh `ResultCache` pointed at the same directory
+    serves hits without a single mapspace enumeration).
+
+Values are stored *deconstructed* (factor/order/bypass tables + estimate
+fields) rather than pickled, so cache files are portable, inspectable and
+independent of code layout; mappings are rebuilt against the live
+`Workload`/`HardwareDesc` objects at lookup time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+from ..core.designer import HardwareDesc
+from ..core.evaluator import Estimate
+from ..core.mapper import MapperConfig
+from ..core.mapping import Mapping
+from ..core.workload import Workload
+
+CACHE_FORMAT = 1
+
+
+# ---------------------------------------------------------------------------
+# key scheme
+# ---------------------------------------------------------------------------
+def _workload_sig(wl: Workload) -> Dict[str, Any]:
+    return {"dims": list(wl.dims), "stride": list(wl.stride),
+            "dilation": list(wl.dilation), "kind": wl.kind,
+            "depthwise": wl.depthwise,
+            "in_zf": round(wl.input_zero_frac, 9),
+            "w_zf": round(wl.weight_zero_frac, 9)}
+
+
+def _hw_sig(hw: HardwareDesc) -> Dict[str, Any]:
+    # The top-level `name` is cosmetic and excluded (identically-parameterized
+    # designs share entries); level names stay — mappings/configs refer to
+    # them (cache_level, zero_skip_level).
+    return {"levels": [dataclasses.asdict(lv) for lv in hw.levels],
+            "precision_bits": hw.precision_bits,
+            "frequency_hz": hw.frequency_hz,
+            "zero_skip_level": hw.zero_skip_level}
+
+
+def _cfg_sig(cfg: MapperConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    d["act_reserve"] = sorted(d["act_reserve"].items())
+    return d
+
+
+def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
+              goal: str, scorer: str = "per-arch") -> str:
+    """`scorer` is the selection path ("per-arch" seed semantics vs
+    "fused" cross-arch batching): near-tied mapspaces can elect different
+    winners under the two f32 evaluation orders, so entries are not
+    interchangeable across paths — keying on it keeps per-arch runs
+    bit-exact with the seed explorer even on a shared cache."""
+    payload = {"v": CACHE_FORMAT, "workload": _workload_sig(wl),
+               "hw": _hw_sig(hw), "cfg": _cfg_sig(cfg), "goal": goal,
+               "scorer": scorer}
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# value codec (WorkloadResult <-> plain JSON dict)
+# ---------------------------------------------------------------------------
+def encode_result(result) -> Dict[str, Any]:
+    """WorkloadResult -> JSON-safe dict (mapping deconstructed)."""
+    m: Mapping = result.mapping
+    return {
+        "v": CACHE_FORMAT,
+        "factors": [list(f) for f in m.factors],
+        "orders": [list(o) if o is not None else None for o in m.orders],
+        "bypass": [sorted(b) for b in m.bypass],
+        "mapspace_size": result.mapspace_size,
+        "n_valid": result.n_valid,
+        "estimate": dataclasses.asdict(result.estimate),
+    }
+
+
+def decode_result(entry: Dict[str, Any], wl: Workload, hw: HardwareDesc):
+    """JSON dict -> WorkloadResult, rebuilt against live wl/hw objects."""
+    from ..core.explorer import WorkloadResult
+    mapping = Mapping(
+        wl, hw,
+        tuple(tuple(f) for f in entry["factors"]),
+        tuple(tuple(o) if o is not None else None for o in entry["orders"]),
+        tuple(frozenset(b) for b in entry["bypass"]))
+    est = Estimate(**entry["estimate"])
+    return WorkloadResult(workload=wl, mapping=mapping, estimate=est,
+                          mapspace_size=entry["mapspace_size"],
+                          n_valid=entry["n_valid"])
+
+
+# ---------------------------------------------------------------------------
+# the two-tier store
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CacheStats:
+    hits_memory: int = 0
+    hits_disk: int = 0
+    misses: int = 0
+    puts: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.hits_memory + self.hits_disk
+
+
+class ResultCache:
+    """In-memory LRU over an optional on-disk JSON tier.
+
+    path=None gives a process-local cache; with a path, entries persist and
+    a fresh ResultCache on the same path serves them as disk hits.
+    """
+
+    def __init__(self, path: Optional[str] = None, max_memory: int = 4096):
+        self.path = path
+        self.max_memory = max_memory
+        self._mem: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self.stats = CacheStats()
+        if path:
+            os.makedirs(path, exist_ok=True)
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"{key}.json")
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        entry = self._mem.get(key)
+        if entry is not None:
+            self._mem.move_to_end(key)
+            self.stats.hits_memory += 1
+            return entry
+        if self.path:
+            try:
+                with open(self._file(key)) as f:
+                    entry = json.load(f)
+            except (FileNotFoundError, json.JSONDecodeError):
+                entry = None
+            if entry is not None and entry.get("v") == CACHE_FORMAT:
+                self.stats.hits_disk += 1
+                self._remember(key, entry)
+                return entry
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: str, entry: Dict[str, Any]) -> None:
+        self.stats.puts += 1
+        self._remember(key, entry)
+        if self.path:
+            # atomic-ish: write sidecar then rename, so concurrent readers
+            # never observe a torn file
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(entry, f)
+                os.replace(tmp, self._file(key))
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+
+    def _remember(self, key: str, entry: Dict[str, Any]) -> None:
+        self._mem[key] = entry
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.max_memory:
+            self._mem.popitem(last=False)
+
+    def clear_memory(self) -> None:
+        self._mem.clear()
+
+    def __len__(self) -> int:
+        return len(self._mem)

@@ -1,0 +1,284 @@
+"""Search orchestration: budgeted strategy stepping over an architecture
+lattice with cached, cross-architecture-batched mapspace evaluation.
+
+One `run_search` call is the paper's Algorithm 1 generalized three ways:
+
+  * the outer "for each hardware description" loop becomes a pluggable
+    Strategy (exhaustive / random / anneal / evolve) consuming a shared
+    evaluation budget;
+  * per-workload mapspace searches consult a persistent ResultCache first
+    (repeated layer shapes and revisited architectures cost nothing) and
+    the misses of a whole round fuse into cross-architecture
+    `batch_frontier` device calls;
+  * every evaluated architecture feeds a multi-objective ParetoFront in
+    addition to the scalar goal ranking.
+
+`core.explorer.explore` delegates here with strategy="exhaustive" and
+batching="per-arch", which reproduces the seed explorer result exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.evaluator import evaluate_network
+from ..core.explorer import ArchResult, WorkloadResult
+from ..core.mapper import MapperConfig, build_mapspace
+from ..core.evaluator import evaluate_mapping
+from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
+from ..core.workload import TENSORS
+from .batch_frontier import MapspaceJob, fused_best, per_arch_best
+from .cache import ResultCache, cache_key, decode_result, encode_result
+from .pareto import DEFAULT_OBJECTIVES, ParetoFront
+from .space import ArchSpace, Coords, as_space
+from .strategies import Strategy, make_strategy
+
+
+@dataclasses.dataclass
+class SearchReport:
+    """Structured outcome of one run_search call."""
+    goal: str
+    strategy: str
+    objectives: Tuple[str, ...]
+    budget: int
+    space_size: int
+    best: ArchResult
+    best_coords: Coords
+    all_archs: List[ArchResult]          # evaluation order
+    pareto: ParetoFront
+    history: List[Dict[str, Any]]        # one row per *fresh* evaluation
+    n_evaluated: int = 0                 # distinct architectures evaluated
+    n_revisits: int = 0                  # strategy re-proposals served free
+    n_enumerations: int = 0              # mapspaces actually built
+    n_cache_hits: int = 0                # workload results served from cache
+    n_cache_misses: int = 0
+
+    def goal_value(self) -> float:
+        return self.best.goal_value(self.goal)
+
+    def best_curve(self) -> List[float]:
+        """Best-so-far goal value after each fresh evaluation."""
+        out: List[float] = []
+        cur = float("inf")
+        for row in self.history:
+            cur = min(cur, row["value"])
+            out.append(cur)
+        return out
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "goal": self.goal, "strategy": self.strategy,
+            "budget": self.budget, "space_size": self.space_size,
+            "best_arch": self.best.hardware.name,
+            "best_value": self.goal_value(),
+            "n_evaluated": self.n_evaluated,
+            "n_revisits": self.n_revisits,
+            "n_enumerations": self.n_enumerations,
+            "n_cache_hits": self.n_cache_hits,
+            "n_cache_misses": self.n_cache_misses,
+            "pareto_size": len(self.pareto),
+            "pareto": self.pareto.summary(),
+            "best_curve": self.best_curve(),
+        }
+
+
+class _Evaluator:
+    """Evaluates batches of lattice coordinates into ArchResults, with
+    cache consult and (optionally) cross-arch fused scoring."""
+
+    def __init__(self, space: ArchSpace, workloads: TaskWorkloads,
+                 cfg: MapperConfig, goal: str, cache_level: str,
+                 use_batch: bool, batching: str, cache: ResultCache,
+                 report: SearchReport):
+        self.space = space
+        self.workloads = workloads
+        self.cfg = cfg
+        self.goal = goal
+        self.cache_level = cache_level
+        self.use_batch = use_batch
+        self.batching = batching
+        self.cache = cache
+        self.report = report
+
+    def __call__(self, batch: Sequence[Coords]) -> Dict[Coords, ArchResult]:
+        # pass 1: cache consult; collect mapspace jobs for the misses
+        decoded: Dict[Tuple[Coords, str], WorkloadResult] = {}
+        keymaps: Dict[Coords, List[str]] = {}
+        jobs: List[MapspaceJob] = []
+        meta: Dict[Tuple[Coords, str], Tuple[int, int]] = {}
+        for coords in batch:
+            hw = self.space.at(coords)
+            keys: List[str] = []
+            for wl in self.workloads.intra:
+                k = cache_key(wl, hw, self.cfg, self.goal,
+                              scorer=self.batching)
+                keys.append(k)
+                tag = (coords, k)
+                if tag in decoded or tag in meta:
+                    continue            # repeated layer within this arch
+                entry = self.cache.get(k)
+                if entry is not None:
+                    decoded[tag] = decode_result(entry, wl, hw)
+                    self.report.n_cache_hits += 1
+                    continue
+                self.report.n_cache_misses += 1
+                space_ = build_mapspace(wl, hw, self.cfg)
+                self.report.n_enumerations += 1
+                if not space_.mappings:
+                    raise RuntimeError(
+                        f"empty valid mapspace for {wl.name} on {hw.name}")
+                jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
+                                        mappings=space_.mappings))
+                meta[tag] = (space_.total_candidates, space_.n_valid)
+            keymaps[coords] = keys
+
+        # pass 2: score all pending mapspaces (fused across architectures,
+        # or per-job with seed semantics)
+        if jobs:
+            if self.batching == "fused":
+                bests = fused_best(jobs, self.goal)
+            else:
+                bests = per_arch_best(jobs, self.goal, self.use_batch)
+            for job, b in zip(jobs, bests):
+                m = job.mappings[b.index]
+                est = evaluate_mapping(m)
+                total, n_valid = meta[job.tag]
+                r = WorkloadResult(workload=job.workload, mapping=m,
+                                   estimate=est, mapspace_size=total,
+                                   n_valid=n_valid)
+                decoded[job.tag] = r
+                self.cache.put(job.tag[1], encode_result(r))
+
+        # pass 3: network-level assembly per architecture (Algorithm 1
+        # lines 12-14; mirrors core.explorer.evaluate_architecture)
+        out: Dict[Coords, ArchResult] = {}
+        for coords in batch:
+            hw = self.space.at(coords)
+            results = [
+                dataclasses.replace(decoded[(coords, k)], workload=wl)
+                for wl, k in zip(self.workloads.intra, keymaps[coords])]
+            max_buf = 0.0
+            for r in results:
+                for li in hw.memory_level_indices():
+                    if hw.tiling_levels[li].name == self.cache_level:
+                        used = sum(r.mapping.buffer_words(li, t)
+                                   for t in TENSORS)
+                        max_buf = max(max_buf, used)
+            network = evaluate_network(
+                hw, [r.estimate for r in results], self.workloads.preproc,
+                self.workloads.activations, cache_level=self.cache_level,
+                mapping_buffer_words=max_buf)
+            out[coords] = ArchResult(hardware=hw, network=network,
+                                     per_workload=results)
+        return out
+
+
+def run_search(task: Union[TaskDescription, TaskWorkloads],
+               arch_space,
+               goal: str = "edp",
+               strategy: Union[str, Strategy] = "exhaustive",
+               budget: Optional[int] = None,
+               cfg: Optional[MapperConfig] = None,
+               cache_level: str = "Gbuf",
+               use_batch: bool = True,
+               batching: str = "fused",
+               cache: Union[ResultCache, str, None] = None,
+               objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+               seed: int = 0,
+               round_size: int = 8,
+               strategy_params: Optional[Dict[str, Any]] = None,
+               verbose: bool = False) -> SearchReport:
+    """Multi-strategy, multi-objective design-space exploration.
+
+    task       : TaskDescription (analyzed here) or pre-built TaskWorkloads
+    arch_space : ArchSpace lattice or iterable of HardwareDesc
+    strategy   : registry name (exhaustive|random|anneal|evolve) or instance
+    budget     : max distinct architecture evaluations (default: lattice
+                 size — exhaustive coverage)
+    batching   : "fused" packs a round's mapspaces into cross-architecture
+                 batch_eval calls; "per-arch" keeps the seed explorer's
+                 one-call-per-(arch, workload) path (bit-exact parity)
+    cache      : ResultCache, a directory path for a persistent cache, or
+                 None for a fresh in-memory cache
+    """
+    if batching not in ("fused", "per-arch"):
+        raise ValueError(f"batching must be 'fused' or 'per-arch', "
+                         f"got {batching!r}")
+    space = as_space(arch_space)
+    workloads = task if isinstance(task, TaskWorkloads) else analyze(task)
+    cfg = cfg or MapperConfig()
+    if isinstance(cache, str):
+        cache = ResultCache(path=cache)
+    elif cache is None:
+        cache = ResultCache()
+    strat = strategy if isinstance(strategy, Strategy) else make_strategy(
+        strategy, space, seed=seed, **(strategy_params or {}))
+    # budget counts *distinct* architecture evaluations, so it can never
+    # exceed the lattice; clamping also stops never-exhausted strategies
+    # (anneal/evolve) from spinning on revisits once everything is memoized
+    budget = space.size if budget is None else max(1, min(budget,
+                                                          space.size))
+
+    report = SearchReport(goal=goal, strategy=strat.name,
+                          objectives=tuple(objectives), budget=budget,
+                          space_size=space.size, best=None,   # type: ignore
+                          best_coords=(), all_archs=[],
+                          pareto=ParetoFront(objectives), history=[])
+    evaluate = _Evaluator(space, workloads, cfg, goal, cache_level,
+                          use_batch, batching, cache, report)
+
+    memo: Dict[Coords, ArchResult] = {}
+    best: Optional[ArchResult] = None
+    best_coords: Coords = ()
+    best_val = float("inf")
+
+    stall_rounds = 0
+    while report.n_evaluated < budget and not strat.exhausted:
+        if len(memo) >= space.size or stall_rounds >= 100:
+            break                       # nothing fresh left to evaluate
+        want = min(round_size, budget - report.n_evaluated)
+        proposals = strat.ask(want)
+        if not proposals:
+            break                       # strategy is awaiting nothing: stop
+        seen_round = set()
+        ordered: List[Coords] = []
+        for c in proposals:
+            c = tuple(c)
+            if c not in seen_round:
+                seen_round.add(c)
+                ordered.append(c)
+        fresh = [c for c in ordered if c not in memo]
+        stall_rounds = 0 if fresh else stall_rounds + 1
+        if fresh:
+            memo.update(evaluate(fresh))
+        feedback: List[Tuple[Coords, float]] = []
+        fresh_set = set(fresh)
+        for c in ordered:
+            res = memo[c]
+            val = res.goal_value(goal)
+            feedback.append((c, val))
+            if c in fresh_set:
+                report.n_evaluated += 1
+                report.all_archs.append(res)
+                report.pareto.add_network(res.hardware.name, res.network,
+                                          payload=res)
+                report.history.append({
+                    "step": report.n_evaluated, "coords": c,
+                    "arch": res.hardware.name, "value": val})
+                if best is None or val < best_val:
+                    best, best_coords, best_val = res, c, val
+                if verbose:
+                    n = res.network
+                    print(f"  {res.hardware.name:28s} "
+                          f"cycles={n.cycles:.3e} "
+                          f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}")
+            else:
+                report.n_revisits += 1
+        strat.tell(feedback)
+
+    if best is None:
+        raise RuntimeError("search evaluated no architectures "
+                           "(empty space or zero budget)")
+    report.best = best
+    report.best_coords = best_coords
+    return report

@@ -1,0 +1,120 @@
+"""Multi-objective support for the DSE search engine.
+
+TRIM's explorer optimizes one scalar goal; real accelerator DSE asks
+trade-off questions — how much energy does the next 2x of throughput cost,
+which designs are worth fabricating at all.  `ParetoFront` maintains the
+non-dominated set over a configurable tuple of minimized objectives
+(default cycles/energy/area; EDP can be added) while strategies run, so a
+single search pass answers the frontier question for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+#: objective name -> extractor over a NetworkEstimate-like object
+OBJECTIVES = {
+    "cycles": lambda n: n.cycles,
+    "energy_pj": lambda n: n.energy_pj,
+    "area_mm2": lambda n: n.area_mm2,
+    "edp": lambda n: n.edp,
+}
+
+DEFAULT_OBJECTIVES: Tuple[str, ...] = ("cycles", "energy_pj", "area_mm2")
+
+
+def objective_values(network, objectives: Sequence[str]) -> Tuple[float, ...]:
+    """Extract the (minimized) objective tuple from a network estimate."""
+    return tuple(float(OBJECTIVES[o](network)) for o in objectives)
+
+
+def dominates(a: Sequence[float], b: Sequence[float]) -> bool:
+    """True iff `a` is no worse than `b` everywhere and better somewhere
+    (all objectives minimized)."""
+    no_worse = all(x <= y for x, y in zip(a, b))
+    better = any(x < y for x, y in zip(a, b))
+    return no_worse and better
+
+
+def scalarize(values: Sequence[float],
+              weights: Optional[Sequence[float]] = None,
+              ref: Optional[Sequence[float]] = None) -> float:
+    """Weighted-sum scalarization with optional per-objective normalization
+    (`ref` = reference point, e.g. the current best per objective)."""
+    w = weights or [1.0] * len(values)
+    r = ref or [1.0] * len(values)
+    return sum(wi * (v / max(ri, 1e-30)) for wi, v, ri in zip(w, values, r))
+
+
+@dataclasses.dataclass
+class ParetoPoint:
+    key: Any                       # caller identity (arch name / coords)
+    values: Tuple[float, ...]      # objective tuple, minimized
+    payload: Any = None            # e.g. the ArchResult
+
+
+class ParetoFront:
+    """Incrementally maintained non-dominated set (all objectives minimized).
+
+    `add` returns True iff the point joins the frontier; dominated incumbents
+    are evicted.  Equal-valued points are kept once (first wins).
+    """
+
+    def __init__(self, objectives: Sequence[str] = DEFAULT_OBJECTIVES):
+        for o in objectives:
+            if o not in OBJECTIVES:
+                raise KeyError(f"unknown objective {o!r}; "
+                               f"have {sorted(OBJECTIVES)}")
+        self.objectives: Tuple[str, ...] = tuple(objectives)
+        self._points: List[ParetoPoint] = []
+        self.n_offered = 0
+        self.n_evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def points(self) -> List[ParetoPoint]:
+        return list(self._points)
+
+    def values(self) -> List[Tuple[float, ...]]:
+        return [p.values for p in self._points]
+
+    def add(self, key: Any, values: Sequence[float],
+            payload: Any = None) -> bool:
+        vals = tuple(float(v) for v in values)
+        if len(vals) != len(self.objectives):
+            raise ValueError(f"expected {len(self.objectives)} objectives, "
+                             f"got {len(vals)}")
+        if any(math.isnan(v) for v in vals):
+            return False
+        self.n_offered += 1
+        for p in self._points:
+            if dominates(p.values, vals) or p.values == vals:
+                return False
+        keep = [p for p in self._points if not dominates(vals, p.values)]
+        self.n_evicted += len(self._points) - len(keep)
+        keep.append(ParetoPoint(key=key, values=vals, payload=payload))
+        self._points = keep
+        return True
+
+    def add_network(self, key: Any, network, payload: Any = None) -> bool:
+        return self.add(key, objective_values(network, self.objectives),
+                        payload)
+
+    def dominated(self, values: Sequence[float]) -> bool:
+        vals = tuple(float(v) for v in values)
+        return any(dominates(p.values, vals) for p in self._points)
+
+    def best(self, objective: str) -> Optional[ParetoPoint]:
+        """Frontier point minimizing one objective."""
+        if not self._points:
+            return None
+        i = self.objectives.index(objective)
+        return min(self._points, key=lambda p: p.values[i])
+
+    def summary(self) -> List[Dict[str, Any]]:
+        """JSON-friendly view (for SearchReport / benchmark emission)."""
+        return [{"key": str(p.key),
+                 **{o: v for o, v in zip(self.objectives, p.values)}}
+                for p in sorted(self._points, key=lambda p: p.values)]

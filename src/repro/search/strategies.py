@@ -1,0 +1,241 @@
+"""Pluggable architecture-space search strategies (+ registry).
+
+A strategy proposes candidate lattice coordinates and learns from their
+goal values; the driver owns budget accounting, caching, Pareto upkeep and
+evaluation (so strategies stay pure search logic).  Protocol:
+
+    ask(max_n)  -> up to max_n coordinate tuples to evaluate next
+                   ([] + exhausted=True means the strategy is done;
+                    [] + exhausted=False means "tell me results first")
+    tell(batch) -> list of (coords, goal_value) feedback, lower is better
+    exhausted   -> True when the strategy has nothing more to propose
+
+Strategies may re-propose visited coordinates; the driver answers those
+from its memo without burning evaluation budget.
+
+Registry: `@register("name")` + `make_strategy("name", space, ...)`;
+third parties can register their own without touching this module.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .space import ArchSpace, Coords
+
+STRATEGIES: Dict[str, Callable[..., "Strategy"]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        STRATEGIES[name] = cls
+        return cls
+    return deco
+
+
+def make_strategy(name: str, space: ArchSpace, *, seed: int = 0,
+                  **params) -> "Strategy":
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"registered: {sorted(STRATEGIES)}") from None
+    return cls(space, seed=seed, **params)
+
+
+class Strategy:
+    """Base class; subclasses implement ask/tell."""
+
+    name = "base"
+
+    def __init__(self, space: ArchSpace, *, seed: int = 0):
+        self.space = space
+        self.rng = random.Random(seed)
+        self._exhausted = False
+
+    @property
+    def exhausted(self) -> bool:
+        return self._exhausted
+
+    def ask(self, max_n: int) -> List[Coords]:
+        raise NotImplementedError
+
+    def tell(self, batch: Sequence[Tuple[Coords, float]]) -> None:
+        pass
+
+
+@register("exhaustive")
+class ExhaustiveStrategy(Strategy):
+    """Seed-explorer parity: enumerate the whole lattice in Designer order."""
+
+    def __init__(self, space: ArchSpace, *, seed: int = 0):
+        super().__init__(space, seed=seed)
+        self._it = iter(space.all_coords())
+
+    def ask(self, max_n: int) -> List[Coords]:
+        out: List[Coords] = []
+        for c in self._it:
+            out.append(c)
+            if len(out) >= max_n:
+                break
+        if len(out) < max_n:
+            self._exhausted = True
+        return out
+
+
+@register("random")
+class RandomStrategy(Strategy):
+    """Budgeted sampling without replacement (uniform over the lattice)."""
+
+    _SHUFFLE_CAP = 1 << 20      # materialize + shuffle below this size
+
+    def __init__(self, space: ArchSpace, *, seed: int = 0):
+        super().__init__(space, seed=seed)
+        if space.size <= self._SHUFFLE_CAP:
+            coords = list(space.all_coords())
+            self.rng.shuffle(coords)
+            self._it = iter(coords)
+            self._seen = None
+        else:
+            self._it = None
+            self._seen = set()
+
+    def ask(self, max_n: int) -> List[Coords]:
+        out: List[Coords] = []
+        if self._it is not None:
+            for c in self._it:
+                out.append(c)
+                if len(out) >= max_n:
+                    break
+            if len(out) < max_n:
+                self._exhausted = True
+            return out
+        tries = 0
+        while len(out) < max_n and tries < 64 * max_n:
+            tries += 1
+            c = self.space.random_coords(self.rng)
+            if c not in self._seen:
+                self._seen.add(c)
+                out.append(c)
+        return out
+
+
+@register("anneal")
+class AnnealStrategy(Strategy):
+    """Simulated annealing over the arch-parameter lattice.
+
+    Scale-free Metropolis acceptance on relative goal deterioration:
+    accept worse moves with prob exp(-(new/cur - 1) / T), T decaying
+    geometrically.  Restarts from a random point when a chain stalls.
+    """
+
+    def __init__(self, space: ArchSpace, *, seed: int = 0, t0: float = 0.25,
+                 alpha: float = 0.90, stall_restart: int = 8):
+        super().__init__(space, seed=seed)
+        self.t = self.t0 = t0
+        self.alpha = alpha
+        self.stall_restart = stall_restart
+        self.current: Optional[Coords] = None
+        self.cur_val = math.inf
+        self.best: Optional[Coords] = None
+        self.best_val = math.inf
+        self._pending: Optional[Coords] = None
+        self._stall = 0
+
+    def _propose(self) -> Coords:
+        if self.current is None:
+            return self.space.random_coords(self.rng)
+        if self._stall >= self.stall_restart:
+            self._stall = 0
+            self.t = self.t0          # reheat on restart
+            return self.space.random_coords(self.rng)
+        nbrs = self.space.neighbors(self.current)
+        if not nbrs:
+            return self.current
+        return self.rng.choice(nbrs)
+
+    def ask(self, max_n: int) -> List[Coords]:
+        if self._pending is not None:
+            return []                 # sequential chain: await feedback
+        self._pending = self._propose()
+        return [self._pending]
+
+    def tell(self, batch: Sequence[Tuple[Coords, float]]) -> None:
+        for coords, value in batch:
+            if coords != self._pending:
+                continue
+            self._pending = None
+            if value < self.best_val:
+                self.best, self.best_val = coords, value
+            accept = value <= self.cur_val
+            if not accept and math.isfinite(value) and self.cur_val > 0 \
+                    and math.isfinite(self.cur_val):
+                delta = value / self.cur_val - 1.0
+                accept = self.rng.random() < math.exp(-delta / max(self.t,
+                                                                   1e-9))
+            if accept:
+                self._stall = 0 if value < self.cur_val else self._stall + 1
+                self.current, self.cur_val = coords, value
+            else:
+                self._stall += 1
+            self.t *= self.alpha
+
+
+@register("evolve")
+class EvolveStrategy(Strategy):
+    """Generational evolutionary search: tournament selection, uniform
+    per-axis crossover, +-1 lattice-step mutation, elitism."""
+
+    def __init__(self, space: ArchSpace, *, seed: int = 0,
+                 population: int = 8, elite: int = 2,
+                 tournament: int = 3, mutate_p: float = 0.35):
+        super().__init__(space, seed=seed)
+        self.pop_size = max(2, min(population, space.size))
+        self.elite = min(elite, self.pop_size - 1)
+        self.tournament = tournament
+        self.mutate_p = mutate_p
+        self.population: List[Coords] = []
+        self.fitness: Dict[Coords, float] = {}
+        self._init_population()
+
+    def _init_population(self) -> None:
+        seen = set()
+        tries = 0
+        while len(self.population) < self.pop_size and tries < 200:
+            tries += 1
+            c = self.space.random_coords(self.rng)
+            if c not in seen:
+                seen.add(c)
+                self.population.append(c)
+
+    def _unevaluated(self) -> List[Coords]:
+        return [c for c in self.population if c not in self.fitness]
+
+    def ask(self, max_n: int) -> List[Coords]:
+        return self._unevaluated()[:max_n]
+
+    def _select(self, scored: List[Tuple[Coords, float]]) -> Coords:
+        pick = self.rng.sample(scored, min(self.tournament, len(scored)))
+        return min(pick, key=lambda cv: cv[1])[0]
+
+    def tell(self, batch: Sequence[Tuple[Coords, float]]) -> None:
+        for coords, value in batch:
+            self.fitness[coords] = value
+        if self._unevaluated():
+            return                      # generation still in flight
+        scored = sorted(((c, self.fitness[c]) for c in self.population),
+                        key=lambda cv: cv[1])
+        nxt: List[Coords] = [c for c, _ in scored[: self.elite]]
+        seen = set(nxt)
+        tries = 0
+        while len(nxt) < self.pop_size and tries < 50 * self.pop_size:
+            tries += 1
+            child = self.space.crossover(self._select(scored),
+                                         self._select(scored), self.rng)
+            child = self.space.mutate(child, self.rng, self.mutate_p)
+            if child not in seen:
+                seen.add(child)
+                nxt.append(child)
+        self.population = nxt

@@ -10,6 +10,9 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skipping suite")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (MapperConfig, Workload, build_mapspace,

@@ -1,0 +1,270 @@
+"""repro.search subsystem tests: strategy parity with the seed explorer,
+Pareto dominance invariants, cache round-trips, fused cross-arch batching."""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Conv2D, FC, MapperConfig, Pool2D, TaskDescription,
+                        Workload, analyze, build_mapspace,
+                        evaluate_architecture, explore, generate_arch_space,
+                        make_spatial_arch)
+from repro.search import (ArchSpace, MapspaceJob, ParetoFront, ResultCache,
+                          cache_key, decode_result, dominates, encode_result,
+                          fused_best, make_strategy, per_arch_best,
+                          run_search)
+
+TASK = TaskDescription(
+    name="tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+CFG = MapperConfig(max_mappings=200, seed=0)
+
+
+def arch_list():
+    return list(generate_arch_space(num_pes=(16, 64), rf_words=(64,),
+                                    gbuf_words=(2048, 8192), bits=16))
+
+
+@pytest.fixture(scope="module")
+def seed_baseline():
+    """The seed explorer semantics, computed workload-by-workload."""
+    tw = analyze(TASK)
+    res = [evaluate_architecture(tw, hw, CFG, "edp") for hw in arch_list()]
+    best = min(res, key=lambda r: r.goal_value("edp"))
+    return res, best
+
+
+# ---------------------------------------------------------------------------
+# exhaustive parity (acceptance: explore delegates, result exact)
+# ---------------------------------------------------------------------------
+def test_exhaustive_per_arch_matches_seed_exactly(seed_baseline):
+    base, best0 = seed_baseline
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     strategy="exhaustive", batching="per-arch")
+    assert rep.best.hardware.name == best0.hardware.name
+    assert rep.goal_value() == best0.goal_value("edp")
+    assert [r.hardware.name for r in rep.all_archs] == \
+        [r.hardware.name for r in base]
+    assert [r.goal_value("edp") for r in rep.all_archs] == \
+        [r.goal_value("edp") for r in base]
+
+
+def test_explore_wrapper_delegates(seed_baseline):
+    _, best0 = seed_baseline
+    res = explore(TASK, arch_list(), goal="edp", cfg=CFG)
+    assert res.goal == "edp"
+    assert res.best.hardware.name == best0.hardware.name
+    assert res.best.goal_value("edp") == best0.goal_value("edp")
+    assert len(res.all_archs) == len(arch_list())
+
+
+def test_exhaustive_fused_matches_seed(seed_baseline):
+    _, best0 = seed_baseline
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     strategy="exhaustive", batching="fused")
+    assert rep.best.hardware.name == best0.hardware.name
+    assert rep.goal_value() == pytest.approx(best0.goal_value("edp"),
+                                             rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# strategies + budget accounting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ["random", "anneal", "evolve"])
+def test_budgeted_strategies(strategy, seed_baseline):
+    base, _ = seed_baseline
+    cache = ResultCache()
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     strategy=strategy, budget=3, seed=2, cache=cache)
+    assert rep.strategy == strategy
+    assert 1 <= rep.n_evaluated <= 3
+    assert len(rep.all_archs) == rep.n_evaluated
+    vals = [r.goal_value("edp") for r in rep.all_archs]
+    assert rep.goal_value() == min(vals)
+    # best-so-far curve is monotone non-increasing
+    curve = rep.best_curve()
+    assert all(a >= b for a, b in zip(curve, curve[1:]))
+    # evaluated values are real architecture values from the space
+    all_vals = {r.goal_value("edp") for r in base}
+    for v in vals:
+        assert any(math.isclose(v, w, rel_tol=1e-6) for w in all_vals)
+
+
+def test_strategy_registry_rejects_unknown():
+    space = ArchSpace.from_archs(arch_list())
+    with pytest.raises(KeyError):
+        make_strategy("gradient-descent", space)
+
+
+@pytest.mark.parametrize("strategy", ["anneal", "evolve", "random"])
+def test_budget_above_space_size_terminates(strategy):
+    # never-exhausted strategies must not spin on revisits once the whole
+    # lattice is memoized (regression: anneal hung with budget > size)
+    archs = arch_list()[:2]
+    rep = run_search(TASK, archs, goal="edp", cfg=CFG, strategy=strategy,
+                     budget=10, seed=0)
+    assert rep.n_evaluated <= len(archs)
+    assert rep.budget == len(archs)              # clamped to the lattice
+
+
+def test_anneal_on_lattice_space():
+    space = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64, 128),
+                              gbuf_words=(2048, 8192), bits=16,
+                              zero_skip=False)
+    assert space.size == 8
+    rep = run_search(TASK, space, goal="edp", cfg=CFG, strategy="anneal",
+                     budget=5, seed=0)
+    assert rep.n_evaluated <= 5
+    assert rep.best.hardware.name.startswith("pe")
+    # lattice neighbors differ by one +-1 step on one axis
+    for c in space.all_coords():
+        for nb in space.neighbors(c):
+            assert sum(abs(a - b) for a, b in zip(c, nb)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Pareto dominance invariants (property-style, no hypothesis dependency)
+# ---------------------------------------------------------------------------
+def test_pareto_front_property():
+    rng = random.Random(7)
+    for trial in range(20):
+        front = ParetoFront(("cycles", "energy_pj", "area_mm2"))
+        pts = [(rng.uniform(1, 100), rng.uniform(1, 100),
+                rng.uniform(1, 100)) for _ in range(60)]
+        for i, p in enumerate(pts):
+            front.add(i, p)
+        vals = front.values()
+        # 1. the front only contains offered points
+        assert set(vals) <= set(pts)
+        # 2. no front member dominates another
+        for a in vals:
+            for b in vals:
+                assert not dominates(a, b) or a == b
+        # 3. every offered point is dominated-or-equal by some front member
+        for p in pts:
+            assert any(dominates(v, p) or v == p for v in vals)
+
+
+def test_pareto_add_semantics():
+    front = ParetoFront(("cycles", "energy_pj"))
+    assert front.add("a", (10, 10))
+    assert not front.add("b", (11, 11))          # dominated -> rejected
+    assert front.add("c", (3, 30))               # trade-off -> kept
+    assert front.add("d", (4, 4))                # dominates "a" -> evicts it
+    keys = {p.key for p in front.points()}
+    assert keys == {"c", "d"}
+    assert front.best("cycles").key == "c"
+    assert not front.add("e", (4, 4))            # duplicate of "d"
+    with pytest.raises(KeyError):
+        ParetoFront(("not-an-objective",))
+
+
+def test_run_search_pareto_is_nondominated(seed_baseline):
+    base, _ = seed_baseline
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG)
+    assert 1 <= len(rep.pareto) <= len(base)
+    vals = rep.pareto.values()
+    for a in vals:
+        for b in vals:
+            assert not dominates(a, b) or a == b
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+def test_cache_roundtrip_and_key_scheme():
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096, bits=16)
+    wl = analyze(TASK).intra[0]
+    k1 = cache_key(wl, hw, CFG, "edp")
+    assert k1 == cache_key(wl, hw, CFG, "edp")
+    assert k1 != cache_key(wl, hw, CFG, "latency")
+    assert k1 != cache_key(wl, hw, MapperConfig(max_mappings=50), "edp")
+    hw2 = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                            bits=16, frequency_hz=100e6)
+    assert k1 != cache_key(wl, hw2, CFG, "edp")
+    # name is cosmetic: identically-parameterized archs share entries
+    hw3 = make_spatial_arch(name="other", num_pes=16, rf_words=64,
+                            gbuf_words=4096, bits=16)
+    assert k1 == cache_key(wl, hw3, CFG, "edp")
+    # fused and per-arch scorers may elect different tie winners: separate
+    assert k1 != cache_key(wl, hw, CFG, "edp", scorer="fused")
+
+    from repro.core.explorer import find_optimal_mapping
+    r = find_optimal_mapping(wl, hw, CFG, "edp")
+    entry = encode_result(r)
+    back = decode_result(entry, wl, hw)
+    assert back.mapping.factors == r.mapping.factors
+    assert back.mapping.orders == r.mapping.orders
+    assert back.mapping.bypass == r.mapping.bypass
+    assert back.estimate.cycles == r.estimate.cycles
+    assert back.estimate.energy_pj == r.estimate.energy_pj
+    assert back.mapspace_size == r.mapspace_size
+
+
+def test_cache_lru_eviction():
+    c = ResultCache(max_memory=2)
+    for i in range(4):
+        c.put(f"k{i}", {"v": 1, "i": i})
+    assert len(c) == 2
+    assert c.get("k0") is None and c.get("k3")["i"] == 3
+
+
+def test_disk_cache_survives_fresh_process_object(tmp_path, seed_baseline):
+    _, best0 = seed_baseline
+    d = str(tmp_path / "dse-cache")
+    r1 = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                    cache=ResultCache(path=d))
+    assert r1.n_enumerations > 0
+    # fresh cache object on the same directory simulates a new process
+    r2 = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                    cache=ResultCache(path=d))
+    assert r2.n_enumerations == 0            # zero mapspace enumerations
+    assert r2.n_cache_hits == r1.n_enumerations + r1.n_cache_hits
+    assert r2.goal_value() == r1.goal_value()
+    assert r2.best.hardware.name == best0.hardware.name
+
+
+def test_shared_cache_across_strategies():
+    cache = ResultCache()
+    run_search(TASK, arch_list(), goal="edp", cfg=CFG, cache=cache)
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     strategy="random", budget=4, cache=cache, seed=3)
+    assert rep.n_enumerations == 0
+
+
+# ---------------------------------------------------------------------------
+# fused cross-architecture batching
+# ---------------------------------------------------------------------------
+def test_fused_best_matches_per_arch():
+    wl = Workload(dims=(2, 8, 4, 3, 3, 4, 4), input_zero_frac=0.2)
+    hws = [make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                             bits=16, zero_skip=True),
+           make_spatial_arch(num_pes=64, rf_words=128, gbuf_words=16384,
+                             bits=16, zero_skip=False)]
+    jobs = [MapspaceJob(tag=i, hw=hw, workload=wl,
+                        mappings=build_mapspace(wl, hw, CFG).mappings)
+            for i, hw in enumerate(hws)]
+    fused = fused_best(jobs, "edp")
+    ref = per_arch_best(jobs, "edp", use_batch=True)
+    assert [b.tag for b in fused] == [b.tag for b in ref]
+    for f, r, job in zip(fused, ref, jobs):
+        assert f.n_scored == len(job.mappings)
+        # same winner (or a tie at identical score under f32)
+        assert f.value == pytest.approx(r.value, rel=1e-5)
+        assert f.index == r.index
+
+
+def test_fused_best_splits_oversized_groups():
+    wl = Workload(dims=(2, 8, 4, 1, 1, 4, 4))
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096, bits=16)
+    ms = build_mapspace(wl, hw, CFG).mappings
+    jobs = [MapspaceJob(tag=i, hw=hw, workload=wl, mappings=list(ms))
+            for i in range(3)]
+    small = fused_best(jobs, "edp", max_group=len(ms) + 1)
+    big = fused_best(jobs, "edp")
+    assert [(b.tag, b.index) for b in small] == \
+        [(b.tag, b.index) for b in big]
