@@ -46,6 +46,21 @@ def run(n=2000):
     mapspace_eval(ms, block=256, interpret=True)
     kernel_us = (time.time() - t0) * 1e6 / n
 
+    # backend dispatch layer over the same mapspace (jnp vs routed pallas;
+    # the dedicated jnp-vs-pallas throughput claim lives in
+    # bench_backend_dispatch).  Overhead baseline is batch_scores — the
+    # engine the jnp backend wraps, packing included — not the pre-packed
+    # evaluate_batch call above.
+    from repro.core.backend import score_mapspace
+    from repro.core.batch_eval import batch_scores
+    score_mapspace(ms, "edp", "jnp")                 # compile
+    engine_us = min(_timed(lambda: batch_scores(ms, "edp"))
+                    for _ in range(3)) * 1e6 / n
+    disp_jnp_us = min(_timed(lambda: score_mapspace(ms, "edp", "jnp"))
+                      for _ in range(3)) * 1e6 / n
+    disp_pal_us = min(_timed(lambda: score_mapspace(ms, "edp", "pallas"))
+                      for _ in range(3)) * 1e6 / n
+
     # (d) cross-arch fused batching vs one vectorized call per arch.
     # Same workload, four architectures from the Designer lattice; the seed
     # path packs + evaluates each arch separately, the fused path packs all
@@ -75,8 +90,15 @@ def run(n=2000):
     res = {"n": n, "scalar_us": scalar_us, "batch_us": batch_us,
            "kernel_interpret_us": kernel_us,
            "speedup_batch": scalar_us / batch_us,
+           "engine_jnp_us": engine_us,
+           "backend_jnp_us": disp_jnp_us,
+           "backend_pallas_us": disp_pal_us,
            "cross_arch_n": total, "single_arch_us": single_us,
            "fused_us": fused_us, "fused_speedup": single_us / fused_us}
+    claim(res, "backend dispatch overhead over batch_scores <= 25%",
+          disp_jnp_us <= engine_us * 1.25,
+          f"engine={engine_us:.2f}us dispatch={disp_jnp_us:.2f}us "
+          f"per mapping")
     claim(res, "vectorized evaluator beats scalar by >10x",
           res["speedup_batch"] > 10,
           f"{scalar_us:.1f}us -> {batch_us:.2f}us per mapping "
@@ -101,6 +123,10 @@ def rows(res):
          f"speedup={res['speedup_batch']:.0f}x"),
         ("mapspace_pallas_interpret", res["kernel_interpret_us"],
          "interpret-mode (correctness path)"),
+        ("mapspace_backend_jnp", res["backend_jnp_us"],
+         "score_mapspace dispatch, jnp engine"),
+        ("mapspace_backend_pallas", res["backend_pallas_us"],
+         "score_mapspace dispatch, pallas engine (interpret off-TPU)"),
         ("mapspace_single_arch", res["single_arch_us"],
          f"4-arch loop, n={res['cross_arch_n']}"),
         ("mapspace_cross_arch_fused", res["fused_us"],

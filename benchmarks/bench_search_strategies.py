@@ -21,26 +21,32 @@ LATTICE = dict(num_pes=(128, 256, 512), rf_words=(128, 256),
 STRATEGIES = ("exhaustive", "random", "anneal", "evolve")
 
 
-def run(max_mappings=800, budget=9, seed=0):
+def run(max_mappings=800, budget=9, seed=0, backend="auto"):
+    """`backend` is the mapspace-scoring engine axis (auto|jnp|pallas),
+    forwarded to every `run_search` below — pallas routes no-bypass
+    mapspaces through the kernels/mapspace_eval path."""
     task = NETWORKS["alexnet-cifar"](batch_size=16, processing="Inference")
     space = ArchSpace.spatial(bits=32, zero_skip=True, **LATTICE)
     cfg = MapperConfig(max_mappings=max_mappings, seed=seed)
     cache = ResultCache()
-    out = {"space_size": space.size, "budget": budget, "strategies": {}}
+    out = {"space_size": space.size, "budget": budget, "backend": backend,
+           "strategies": {}}
 
     # full exhaustive sweep = ground-truth optimum (and warms the cache)
     t = Timer()
     full = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
-                      strategy="exhaustive", batching="fused", seed=seed)
+                      strategy="exhaustive", batching="fused", seed=seed,
+                      backend=backend)
     out["optimum"] = {"arch": full.best.hardware.name,
                       "edp": full.goal_value(),
-                      "us": t.us(), "n_enumerations": full.n_enumerations}
+                      "us": t.us(), "n_enumerations": full.n_enumerations,
+                      "backend": full.backend}
 
     for name in STRATEGIES:
         t = Timer()
         rep = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
                          strategy=name, budget=budget, batching="fused",
-                         seed=seed)
+                         seed=seed, backend=backend)
         out["strategies"][name] = {
             "best_arch": rep.best.hardware.name, "best_edp": rep.goal_value(),
             "n_evaluated": rep.n_evaluated, "n_revisits": rep.n_revisits,

@@ -21,6 +21,7 @@ MODULES = [
     ("fig18_19_batch_size", {"max_mappings": 3000}),
     ("fig20_21_edp_dse", {"max_mappings": 1500}),
     ("bench_mapspace_throughput", {}),
+    ("bench_backend_dispatch", {"max_mappings": 2000}),
     ("bench_search_strategies", {"max_mappings": 800}),
     ("bench_trim_planner", {}),
 ]

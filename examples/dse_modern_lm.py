@@ -48,7 +48,7 @@ def lm_task_workloads(top_k=3):
 
 
 def run_search_dse(strategy: str, budget: int, compare: bool,
-                   seed: int = 0):
+                   seed: int = 0, backend: str = "auto"):
     from repro.search import ArchSpace, ResultCache, run_search
 
     cfg, tw = lm_task_workloads()
@@ -57,10 +57,11 @@ def run_search_dse(strategy: str, budget: int, compare: bool,
     cache = ResultCache()
     print(f"{cfg.name}: searching a {space.size}-point lattice "
           f"({'x'.join(str(len(v)) for v in space.axis_values)}) with "
-          f"strategy={strategy}, budget={budget}\n")
+          f"strategy={strategy}, budget={budget}, backend={backend}\n")
 
     rep = run_search(tw, space, goal="edp", cfg=mcfg, strategy=strategy,
-                     budget=budget, cache=cache, seed=seed, verbose=True)
+                     budget=budget, cache=cache, seed=seed, verbose=True,
+                     backend=backend)
     n = rep.best.network
     print(f"\n{strategy} best: {rep.best.hardware.name}  "
           f"edp={n.edp:.3e} (cycles={n.cycles:.3e}, "
@@ -127,9 +128,14 @@ if __name__ == "__main__":
     ap.add_argument("--compare-exhaustive", action="store_true",
                     help="also sweep the full lattice and report the gap")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="mapspace scoring engine (pallas routes no-bypass "
+                         "mapspaces through the kernels/mapspace_eval "
+                         "Pallas kernel; interpret mode off-TPU)")
     args = ap.parse_args()
     if args.strategy:
         run_search_dse(args.strategy, args.budget, args.compare_exhaustive,
-                       args.seed)
+                       args.seed, args.backend)
     else:
         main()

@@ -18,6 +18,9 @@ from .mapping import Mapping
 from .mapper import MapperConfig, Mapspace, build_mapspace, validate
 from .evaluator import (Activity, Estimate, NetworkEstimate,
                         analyze_activity, evaluate_mapping, evaluate_network)
+from .backend import (BACKENDS, best_index, default_backend,
+                      eligibility_mask, pallas_eligible, resolve_backend,
+                      score_mapspace)
 from .explorer import (ArchResult, ExplorationResult, GOALS, WorkloadResult,
                        evaluate_architecture, explore, find_optimal_mapping)
 

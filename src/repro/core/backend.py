@@ -1,0 +1,164 @@
+"""Backend dispatch for mapspace scoring: one entry point, two engines.
+
+`score_mapspace` scores a batch of mappings (all on one hardware/workload
+pair) and routes each mapping to one of two numerically-matched engines:
+
+  * ``jnp``    — `core.batch_eval.evaluate_batch`, the vectorized oracle
+    (validated against the scalar evaluator and the loop simulator);
+  * ``pallas`` — `kernels.mapspace_eval`, the paper's mapping-scoring hot
+    loop as a Pallas TPU kernel (VPU vector arithmetic over [BLOCK, SLOTS]
+    rows).  On hosts without a TPU the kernel runs under
+    ``pl.pallas_call(..., interpret=True)`` so the code path is always
+    testable; on TPU it compiles for the VPU.
+
+The kernel's storage chains are the full memory hierarchy, so only
+*no-bypass* mappings are eligible.  Eligibility is detected per mapping:
+a ``backend="pallas"`` batch that mixes bypass and no-bypass mappings is
+split, the eligible rows scored by the kernel and the rest by the jnp
+oracle, and the scores merged back in order — callers never need to
+pre-sort a mapspace.  ``backend="auto"`` resolves to ``pallas`` when a TPU
+is attached (the kernel then beats per-mapping jnp dispatch) and to
+``jnp`` otherwise (interpret mode is a correctness path, not a fast path).
+
+The kernel emits (cycles, energy) only; validity (fanout + buffer-capacity
+checks) is closed-form per mapping and computed here with the same
+formulas `evaluate_batch` uses, so both backends agree on the valid set
+exactly.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .batch_eval import (GOAL_KEY, batch_scores, make_static, pack,
+                         tile_words_np)
+from .mapping import Mapping
+
+BACKENDS = ("auto", "jnp", "pallas")
+
+
+def default_backend() -> str:
+    """Concrete engine `auto` resolves to on this host."""
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate and collapse `auto` to a concrete engine name."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}")
+    return default_backend() if backend == "auto" else backend
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode default: interpret everywhere but real TPU."""
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def pallas_eligible(mapping: Mapping) -> bool:
+    """The kernel assumes full storage chains: no tensor bypasses any
+    memory level."""
+    return all(not b for b in mapping.bypass)
+
+
+def eligibility_mask(mappings: Sequence[Mapping]) -> np.ndarray:
+    return np.fromiter((pallas_eligible(m) for m in mappings), bool,
+                       count=len(mappings))
+
+
+def _kernel_block(n: int, block: int) -> int:
+    """Shrink the mapping-axis block for small batches (the ops wrapper
+    pads to a block multiple; a 12-mapping group should not pad to 256)."""
+    b = 8
+    while b < n and b < block:
+        b *= 2
+    return b
+
+
+def validity_mask(mappings: Sequence[Mapping]) -> np.ndarray:
+    """Fanout + buffer-capacity validity, formula-identical to the checks
+    in `evaluate_batch` (the pallas kernel does not emit validity)."""
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, _, store = pack(mappings)
+    f = np.asarray(factors, np.float64)
+    store = np.asarray(store)
+    B, L, _ = f.shape
+    valid = np.ones((B,), bool)
+    for ri, r in enumerate(st.rout_idx):
+        valid &= f[:, r, :].prod(axis=1) <= st.fanout[ri]
+    tile_at = np.flip(np.cumprod(np.flip(f, 1), axis=1), 1)
+    for j, li in enumerate(st.mem_idx):
+        if not math.isfinite(st.sizes[j]):
+            continue
+        words = tile_words_np(st, tile_at[:, li])       # [B, 3]
+        used = np.where(store[:, j, :], words, 0.0).sum(axis=1)
+        valid &= used <= st.sizes[j]
+    return valid
+
+
+def _pallas_scores(mappings: List[Mapping], goal: str, block: int,
+                   interpret: Optional[bool]) -> np.ndarray:
+    from ..kernels.mapspace_eval.ops import mapspace_eval
+    if interpret is None:
+        interpret = default_interpret()
+    cycles, energy = mapspace_eval(
+        mappings, block=_kernel_block(len(mappings), block),
+        interpret=interpret)
+    if goal == "latency":
+        return np.asarray(cycles, np.float64)
+    if goal == "energy":
+        return np.asarray(energy, np.float64)
+    return np.asarray(cycles, np.float64) * np.asarray(energy, np.float64)
+
+
+def score_mapspace(mappings: Sequence[Mapping], goal: str = "edp",
+                   backend: str = "auto", *, block: int = 256,
+                   interpret: Optional[bool] = None
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (scores [n], valid [n]); lower score is better, invalid rows
+    carry their score (mask with `valid` before argmin).
+
+    All mappings must share one (hardware, workload) pair — the batch is
+    one mapspace.  `backend` is `auto`, `jnp`, or `pallas`; the pallas
+    engine scores the no-bypass rows with the kernel and falls back to the
+    jnp oracle for the rest.
+    """
+    if not mappings:
+        raise ValueError("score_mapspace: empty mapping batch")
+    if goal not in GOAL_KEY:
+        raise ValueError(f"goal must be one of {sorted(GOAL_KEY)}, "
+                         f"got {goal!r}")
+    mappings = list(mappings)
+    engine = resolve_backend(backend)
+    if engine == "jnp":
+        scores, valid = batch_scores(mappings, goal)
+        return np.asarray(scores, np.float64), np.asarray(valid, bool)
+
+    mask = eligibility_mask(mappings)
+    scores = np.empty((len(mappings),), np.float64)
+    valid = np.empty((len(mappings),), bool)
+    if mask.any():
+        idx = np.flatnonzero(mask)
+        sub = [mappings[i] for i in idx]
+        scores[idx] = _pallas_scores(sub, goal, block, interpret)
+        valid[idx] = validity_mask(sub)     # kernel emits no validity
+    if not mask.all():
+        idx = np.flatnonzero(~mask)
+        s, v = batch_scores([mappings[i] for i in idx], goal)
+        scores[idx] = np.asarray(s, np.float64)
+        valid[idx] = np.asarray(v, bool)
+    return scores, valid
+
+
+def best_index(mappings: Sequence[Mapping], goal: str = "edp",
+               backend: str = "auto", *, block: int = 256,
+               interpret: Optional[bool] = None) -> int:
+    """Index of the goal-best *valid* mapping (ties break low, matching
+    `batch_eval.batch_best_index`)."""
+    scores, valid = score_mapspace(mappings, goal, backend, block=block,
+                                   interpret=interpret)
+    return int(np.argmin(np.where(valid, scores, np.inf)))

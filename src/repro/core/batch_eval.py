@@ -15,7 +15,9 @@ EDP) is closed-form batched arithmetic.  Semantics match
 `evaluator.evaluate_mapping` exactly — asserted by tests/test_batch_eval.py.
 
 The per-mapping scoring loop is also available as a Pallas TPU kernel
-(`repro.kernels.mapspace_eval`) with this module as its oracle.
+(`repro.kernels.mapspace_eval`) with this module as its oracle; callers
+pick an engine through `core.backend.score_mapspace` (backend dispatch
+with automatic no-bypass eligibility gating).
 """
 from __future__ import annotations
 
@@ -158,6 +160,24 @@ RELEVANT = {
 }
 SLIDING = np.zeros(7, bool)
 SLIDING[[R_, S_, E_, F_]] = True
+
+GOAL_KEY = {"latency": "cycles", "energy": "energy_pj", "edp": "edp"}
+
+
+def tile_words_np(st: HwStatic, tile):
+    """tile: [..., 7] float -> [..., 3] words in TENSORS order.  Numpy
+    twin of `_tensor_tile_words`, shared by the kernel packer
+    (kernels/mapspace_eval/ops.py) and `core.backend.validity_mask` so
+    the halo/depthwise/has-weight formulas exist exactly twice (jnp +
+    np), not once per consumer."""
+    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
+    u, v = st.stride
+    dr, ds = st.dilation
+    p = (e - 1) * u + (r - 1) * dr + 1
+    q = (f - 1) * v + (s - 1) * ds + 1
+    w = (r * s * c * m) if st.has_weight else np.zeros_like(n)
+    o = n * e * f * (c if st.depthwise else m)
+    return np.stack([n * c * p * q, w, o], axis=-1)
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -721,7 +741,11 @@ def batch_scores(mappings: Sequence[Mapping], goal: str = "edp"):
     return np.asarray(out[key][:n]), np.asarray(out["valid"][:n])
 
 
-def batch_best_index(mappings: Sequence[Mapping], goal: str = "edp") -> int:
+def batch_best_index(mappings: Sequence[Mapping], goal: str = "edp",
+                     backend: str = "jnp") -> int:
+    if backend != "jnp":
+        from .backend import best_index     # lazy: backend wraps this module
+        return best_index(mappings, goal, backend)
     scores, valid = batch_scores(mappings, goal)
     scores = np.where(valid, scores, np.inf)
     return int(np.argmin(scores))

@@ -69,8 +69,13 @@ def _workload_key(wl: Workload):
 def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
                          cfg: Optional[MapperConfig] = None,
                          goal: str = "edp",
-                         use_batch: bool = True) -> WorkloadResult:
-    """Search one workload's mapspace for the goal-optimal mapping."""
+                         use_batch: bool = True,
+                         backend: str = "jnp") -> WorkloadResult:
+    """Search one workload's mapspace for the goal-optimal mapping.
+
+    `backend` selects the batch scoring engine (`core.backend`): the seed
+    default "jnp", "pallas" for the mapspace-eval kernel (no-bypass rows),
+    or "auto" (pallas iff a TPU is attached)."""
     cfg = cfg or MapperConfig()
     space = build_mapspace(workload, hw, cfg)
     if not space.mappings:
@@ -81,11 +86,14 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
     if use_batch and len(space.mappings) >= 64:
         try:
             from .batch_eval import batch_best_index
-            idx = batch_best_index(space.mappings, goal)
+            idx = batch_best_index(space.mappings, goal, backend=backend)
             best_m = space.mappings[idx]
             best_e = evaluate_mapping(best_m)
             best_v = score(best_e)
         except Exception:
+            if backend != "jnp":
+                raise               # explicit engines fail loudly; only the
+                # seed jnp path degrades to the scalar loop
             best_m = None
     if best_m is None:
         for m in space.mappings:
@@ -102,7 +110,8 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
                           cfg: Optional[MapperConfig] = None,
                           goal: str = "edp",
                           cache_level: str = "Gbuf",
-                          use_batch: bool = True) -> ArchResult:
+                          use_batch: bool = True,
+                          backend: str = "jnp") -> ArchResult:
     """Algorithm 1 lines 6-15 for one hardware description."""
     cfg = cfg or MapperConfig()
     cache: Dict[tuple, WorkloadResult] = {}
@@ -110,7 +119,8 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
     for wl in task_workloads.intra:
         key = _workload_key(wl)
         if key not in cache:
-            cache[key] = find_optimal_mapping(wl, hw, cfg, goal, use_batch)
+            cache[key] = find_optimal_mapping(wl, hw, cfg, goal, use_batch,
+                                              backend=backend)
         r = cache[key]
         results.append(dataclasses.replace(r, workload=wl))
     max_buf = 0.0
@@ -130,19 +140,22 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
 def explore(task: TaskDescription, arch_space: Iterable[HardwareDesc],
             goal: str = "edp", cfg: Optional[MapperConfig] = None,
             cache_level: str = "Gbuf", use_batch: bool = True,
-            verbose: bool = False) -> ExplorationResult:
+            verbose: bool = False,
+            backend: str = "jnp") -> ExplorationResult:
     """Paper Algorithm 1 — full design-space exploration.
 
     Thin compatibility wrapper over `repro.search.run_search` with the
     exhaustive strategy and the seed per-(arch, workload) evaluation path;
     `repro.search` adds budgeted strategies (random/anneal/evolve),
     Pareto-frontier objectives, cross-architecture batching and a
-    persistent result cache on the same machinery.
+    persistent result cache on the same machinery.  `backend` keeps the
+    seed's jnp scoring by default (bit-exact parity); "pallas"/"auto"
+    route scoring through `core.backend.score_mapspace`.
     """
     from ..search.driver import run_search
     report = run_search(task, list(arch_space), goal=goal, cfg=cfg,
                         cache_level=cache_level, use_batch=use_batch,
                         strategy="exhaustive", batching="per-arch",
-                        verbose=verbose)
+                        backend=backend, verbose=verbose)
     return ExplorationResult(best=report.best, all_archs=report.all_archs,
                              goal=goal)

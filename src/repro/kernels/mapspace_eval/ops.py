@@ -3,7 +3,8 @@
 Precomputes the per-mapping tensors described in kernel.py (cheap jnp) and
 bakes hardware constants statically.  Only no-bypass mappings are accepted
 (the kernel's storage chains are the full memory hierarchy); the general
-path is core.batch_eval.
+path is core.batch_eval, and `core.backend.score_mapspace` dispatches
+between the two with per-mapping eligibility gating.
 """
 from __future__ import annotations
 
@@ -15,21 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.batch_eval import (RELEVANT, SLIDING, HwStatic, make_static,
-                                pack)
+                                pack, tile_words_np as _tile_words_np)
 from ...core.mapping import Mapping
 from ...core.workload import N_, M_, C_, R_, S_, E_, F_
 from .kernel import mapspace_eval_fwd
-
-
-def _tile_words_np(st: HwStatic, tile):
-    n, m, c, r, s, e, f = (tile[..., i] for i in range(7))
-    u, v = st.stride
-    dr, ds = st.dilation
-    p = (e - 1) * u + (r - 1) * dr + 1
-    q = (f - 1) * v + (s - 1) * ds + 1
-    w = (r * s * c * m) if st.has_weight else np.zeros_like(n)
-    o = n * e * f * (c if st.depthwise else m)
-    return np.stack([n * c * p * q, w, o], axis=-1)      # [..., 3]
 
 
 def _fresh_np(st: HwStatic, tile, d):

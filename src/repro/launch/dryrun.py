@@ -82,7 +82,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = rl.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = rl.parse_collectives(hlo, n_dev)
     # XLA's cost_analysis counts while bodies once; the trip-weighted HLO

@@ -32,6 +32,17 @@ MODEL_AXES = ("vocab", "ff", "heads", "experts", "ssm_inner",
 REPLICATED = ("head_dim", "kv_lora", "q_lora", "layers", "ssm_heads", None)
 
 
+def _norm_axes(axes):
+    """Canonicalize a mesh-axis assignment: a 1-element tuple is the bare
+    axis name (PartitionSpec treats ('data',) and 'data' as distinct)."""
+    if isinstance(axes, tuple):
+        if not axes:
+            return None
+        if len(axes) == 1:
+            return axes[0]
+    return axes
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
     mesh_axes: Tuple[str, ...]
@@ -53,11 +64,11 @@ class ShardingRules:
                 else None
         if logical == "batch":
             axes = [a for a in ("pod", "data") if a in self.mesh_axes]
-            return tuple(axes) or None
+            return _norm_axes(tuple(axes))
         if logical == "moe_cap":
             # expert-capacity dim: data axes (tokens were batch-sharded)
-            return [tuple(a for a in ("pod", "data")
-                          if a in self.mesh_axes) or None]
+            return [_norm_axes(tuple(a for a in ("pod", "data")
+                                     if a in self.mesh_axes))]
         if logical == "kv_seq":
             # candidates tried in order (see spec_to_pspec): the KV seq dim
             # takes whichever axis the batch/head dims left free — this is
@@ -72,8 +83,8 @@ class ShardingRules:
             # the data axes (batch=1 decode/prefill).
             cands = []
             if self.seq_shard:
-                axes = tuple(a for a in ("pod", "data")
-                             if a in self.mesh_axes)
+                axes = _norm_axes(tuple(a for a in ("pod", "data")
+                                        if a in self.mesh_axes))
                 if axes:
                     cands.append(axes)
             if "model" in self.mesh_axes:

@@ -46,25 +46,44 @@ class JobBest:
 
 
 def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
-               max_group: int = 65536) -> List[JobBest]:
+               max_group: int = 65536,
+               backend: str = "jnp") -> List[JobBest]:
     """Goal-best mapping index per job, fusing jobs across architectures.
 
     Jobs are grouped by BatchSig; each group evaluates as one
     `evaluate_batch_multi` call (split if it would exceed `max_group`
     rows).  Selection semantics match `batch_eval.batch_best_index` per
     job: invalid mappings score +inf, ties break to the lowest index.
+
+    With `backend="pallas"` (or "auto" resolving to pallas), jobs whose
+    whole mapspace is kernel-eligible (no-bypass mappings — the Pallas
+    kernel's storage-chain assumption) are scored one `mapspace_eval`
+    kernel call per job; the remaining jobs keep the fused
+    `evaluate_batch_multi` path, so a round that mixes bypass and
+    no-bypass mapspaces still fuses everything the kernel cannot take.
     """
+    from ..core.backend import eligibility_mask, resolve_backend
+    engine = resolve_backend(backend)
+
     key = GOAL_KEY[goal]
     groups: Dict[object, List[int]] = {}
     statics = []
+    kernel_jobs: List[int] = []
+    out: List[Optional[JobBest]] = [None] * len(jobs)
     for i, job in enumerate(jobs):
         if not job.mappings:
             raise ValueError(f"job {job.tag!r}: empty mapping list")
+        if engine == "pallas" and eligibility_mask(job.mappings).all():
+            kernel_jobs.append(i)
+            statics.append(None)        # keep statics job-indexed
+            continue
         st = make_static(job.hw, job.workload)
         statics.append(st)
         groups.setdefault(sig_of(st), []).append(i)
 
-    out: List[Optional[JobBest]] = [None] * len(jobs)
+    for i in kernel_jobs:
+        out[i] = _kernel_best(jobs[i], goal)
+
     for sig, idxs in groups.items():
         # split oversized groups so padding/bucketing stays bounded
         chunks: List[List[int]] = [[]]
@@ -79,6 +98,18 @@ def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
         for chunk in chunks:
             _eval_group(sig, chunk, jobs, statics, key, out)
     return [b for b in out if b is not None]
+
+
+def _kernel_best(job: MapspaceJob, goal: str) -> JobBest:
+    """Score one all-eligible job with the Pallas mapspace kernel
+    (interpret mode off-TPU), matching the +inf-invalid / low-tie
+    selection semantics of the fused path."""
+    from ..core.backend import score_mapspace
+    scores, valid = score_mapspace(job.mappings, goal, "pallas")
+    scores = np.where(valid, scores, np.inf)
+    best = int(np.argmin(scores))
+    return JobBest(tag=job.tag, index=best, value=float(scores[best]),
+                   n_scored=len(job.mappings))
 
 
 def _eval_group(sig, idxs: List[int], jobs, statics, key: str,
@@ -120,9 +151,12 @@ def _eval_group(sig, idxs: List[int], jobs, statics, key: str,
 
 
 def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
-                  use_batch: bool = True) -> List[JobBest]:
+                  use_batch: bool = True,
+                  backend: str = "jnp") -> List[JobBest]:
     """Seed-semantics fallback: one `batch_best_index` (or scalar loop)
-    per job — exactly the explorer's `find_optimal_mapping` selection."""
+    per job — exactly the explorer's `find_optimal_mapping` selection.
+    A non-jnp `backend` swaps the batch scorer (`core.backend`) while
+    keeping the per-job dispatch shape."""
     import math as _math
 
     from ..core.batch_eval import batch_best_index
@@ -135,9 +169,14 @@ def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
         best_i = None
         if use_batch and len(job.mappings) >= 64:
             try:
-                best_i = batch_best_index(job.mappings, goal)
+                best_i = batch_best_index(job.mappings, goal,
+                                          backend=backend)
                 best_v = score(evaluate_mapping(job.mappings[best_i]))
             except Exception:
+                if backend != "jnp":
+                    raise           # an explicit engine must fail loudly —
+                    # a silent jnp fallback would cache its winner under
+                    # the pallas cache key
                 best_i = None
         if best_i is None:
             best_v = _math.inf

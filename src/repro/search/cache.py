@@ -33,7 +33,7 @@ from ..core.mapper import MapperConfig
 from ..core.mapping import Mapping
 from ..core.workload import Workload
 
-CACHE_FORMAT = 1
+CACHE_FORMAT = 2        # v2: backend joined the key scheme
 
 
 # ---------------------------------------------------------------------------
@@ -64,15 +64,19 @@ def _cfg_sig(cfg: MapperConfig) -> Dict[str, Any]:
 
 
 def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
-              goal: str, scorer: str = "per-arch") -> str:
+              goal: str, scorer: str = "per-arch",
+              backend: str = "jnp") -> str:
     """`scorer` is the selection path ("per-arch" seed semantics vs
-    "fused" cross-arch batching): near-tied mapspaces can elect different
-    winners under the two f32 evaluation orders, so entries are not
-    interchangeable across paths — keying on it keeps per-arch runs
-    bit-exact with the seed explorer even on a shared cache."""
+    "fused" cross-arch batching) and `backend` the scoring engine ("jnp"
+    oracle vs "pallas" mapspace kernel — pass the *resolved* engine, not
+    "auto"): near-tied mapspaces can elect different winners under the
+    different f32 evaluation orders, so entries are not interchangeable
+    across paths — keying on both keeps per-arch/jnp runs bit-exact with
+    the seed explorer even on a shared cache, and jnp/pallas results can
+    never alias each other."""
     payload = {"v": CACHE_FORMAT, "workload": _workload_sig(wl),
                "hw": _hw_sig(hw), "cfg": _cfg_sig(cfg), "goal": goal,
-               "scorer": scorer}
+               "scorer": scorer, "backend": backend}
     blob = json.dumps(payload, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -117,6 +121,7 @@ class CacheStats:
     hits_disk: int = 0
     misses: int = 0
     puts: int = 0
+    disk_evictions: int = 0
 
     @property
     def hits(self) -> int:
@@ -128,11 +133,31 @@ class ResultCache:
 
     path=None gives a process-local cache; with a path, entries persist and
     a fresh ResultCache on the same path serves them as disk hits.
+
+    The disk tier is bounded: every `gc_every` puts (and on explicit
+    `gc()`) entries beyond `max_disk_entries` / `max_disk_bytes` are
+    evicted oldest-mtime-first (reads never touch mtime, so this is
+    oldest-written-first — content-addressed entries are immutable, and
+    DSE hit patterns make insertion age a good staleness proxy).  Either
+    bound can be None for unlimited; both default to generous caps so a
+    long-running sweep cannot fill the disk.  Running entry/byte
+    estimates (seeded by the first scan, advanced per put, corrected on
+    every real scan) let the put-cadence check skip the O(entries)
+    directory scan while the tier is under its bounds.
     """
 
-    def __init__(self, path: Optional[str] = None, max_memory: int = 4096):
+    def __init__(self, path: Optional[str] = None, max_memory: int = 4096,
+                 max_disk_entries: Optional[int] = 100_000,
+                 max_disk_bytes: Optional[int] = 512 << 20,
+                 gc_every: int = 256):
         self.path = path
         self.max_memory = max_memory
+        self.max_disk_entries = max_disk_entries
+        self.max_disk_bytes = max_disk_bytes
+        self.gc_every = max(1, gc_every)
+        self._puts_since_gc = 0
+        self._est_entries: Optional[int] = None     # None = not yet seeded
+        self._est_bytes = 0
         self._mem: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self.stats = CacheStats()
         if path:
@@ -166,15 +191,81 @@ class ResultCache:
         if self.path:
             # atomic-ish: write sidecar then rename, so concurrent readers
             # never observe a torn file
+            blob = json.dumps(entry)
             fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
             try:
                 with os.fdopen(fd, "w") as f:
-                    json.dump(entry, f)
+                    f.write(blob)
                 os.replace(tmp, self._file(key))
             except BaseException:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
                 raise
+            if self._est_entries is not None:
+                # overwrites over-count by one entry; corrected at the
+                # next real scan
+                self._est_entries += 1
+                self._est_bytes += len(blob)
+            self._puts_since_gc += 1
+            if self._puts_since_gc >= self.gc_every:
+                self._puts_since_gc = 0
+                if self._est_entries is None or self._over_bounds():
+                    self.gc()
+
+    def _over_bounds(self) -> bool:
+        return ((self.max_disk_entries is not None
+                 and (self._est_entries or 0) > self.max_disk_entries)
+                or (self.max_disk_bytes is not None
+                    and self._est_bytes > self.max_disk_bytes))
+
+    def gc(self) -> int:
+        """Enforce the disk-tier bounds (full directory scan); -> number
+        of files evicted.  Also sweeps *.tmp sidecars orphaned by a
+        killed writer."""
+        self._puts_since_gc = 0
+        if not self.path or (self.max_disk_entries is None
+                             and self.max_disk_bytes is None):
+            return 0
+        import time
+        files = []
+        total = 0
+        stale = time.time() - 600
+        with os.scandir(self.path) as it:
+            for de in it:
+                try:
+                    st = de.stat()
+                except FileNotFoundError:
+                    continue            # concurrent eviction
+                if de.name.endswith(".tmp"):
+                    if st.st_mtime < stale:
+                        try:
+                            os.unlink(de.path)
+                        except FileNotFoundError:
+                            pass
+                    continue
+                if not de.name.endswith(".json"):
+                    continue
+                files.append((st.st_mtime, st.st_size, de.path))
+                total += st.st_size
+        files.sort()                    # oldest first
+        evicted = 0
+        over_n = (len(files) - self.max_disk_entries
+                  if self.max_disk_entries is not None else 0)
+        for mtime, size, fp in files:
+            if over_n <= 0 and (self.max_disk_bytes is None
+                                or total <= self.max_disk_bytes):
+                break
+            try:
+                os.unlink(fp)
+            except FileNotFoundError:
+                pass
+            evicted += 1
+            over_n -= 1
+            total -= size
+        self._est_entries = len(files) - evicted
+        self._est_bytes = total
+        self.stats.disk_evictions += evicted
+        return evicted
 
     def _remember(self, key: str, entry: Dict[str, Any]) -> None:
         self._mem[key] = entry

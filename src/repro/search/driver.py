@@ -47,6 +47,7 @@ class SearchReport:
     all_archs: List[ArchResult]          # evaluation order
     pareto: ParetoFront
     history: List[Dict[str, Any]]        # one row per *fresh* evaluation
+    backend: str = "jnp"                 # resolved scoring engine
     n_evaluated: int = 0                 # distinct architectures evaluated
     n_revisits: int = 0                  # strategy re-proposals served free
     n_enumerations: int = 0              # mapspaces actually built
@@ -68,6 +69,7 @@ class SearchReport:
     def summary(self) -> Dict[str, Any]:
         return {
             "goal": self.goal, "strategy": self.strategy,
+            "backend": self.backend,
             "budget": self.budget, "space_size": self.space_size,
             "best_arch": self.best.hardware.name,
             "best_value": self.goal_value(),
@@ -89,7 +91,7 @@ class _Evaluator:
     def __init__(self, space: ArchSpace, workloads: TaskWorkloads,
                  cfg: MapperConfig, goal: str, cache_level: str,
                  use_batch: bool, batching: str, cache: ResultCache,
-                 report: SearchReport):
+                 report: SearchReport, backend: str = "jnp"):
         self.space = space
         self.workloads = workloads
         self.cfg = cfg
@@ -99,6 +101,7 @@ class _Evaluator:
         self.batching = batching
         self.cache = cache
         self.report = report
+        self.backend = backend          # resolved engine ("jnp"/"pallas")
 
     def __call__(self, batch: Sequence[Coords]) -> Dict[Coords, ArchResult]:
         # pass 1: cache consult; collect mapspace jobs for the misses
@@ -111,7 +114,7 @@ class _Evaluator:
             keys: List[str] = []
             for wl in self.workloads.intra:
                 k = cache_key(wl, hw, self.cfg, self.goal,
-                              scorer=self.batching)
+                              scorer=self.batching, backend=self.backend)
                 keys.append(k)
                 tag = (coords, k)
                 if tag in decoded or tag in meta:
@@ -136,9 +139,10 @@ class _Evaluator:
         # or per-job with seed semantics)
         if jobs:
             if self.batching == "fused":
-                bests = fused_best(jobs, self.goal)
+                bests = fused_best(jobs, self.goal, backend=self.backend)
             else:
-                bests = per_arch_best(jobs, self.goal, self.use_batch)
+                bests = per_arch_best(jobs, self.goal, self.use_batch,
+                                      backend=self.backend)
             for job, b in zip(jobs, bests):
                 m = job.mappings[b.index]
                 est = evaluate_mapping(m)
@@ -182,6 +186,7 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                cache_level: str = "Gbuf",
                use_batch: bool = True,
                batching: str = "fused",
+               backend: str = "auto",
                cache: Union[ResultCache, str, None] = None,
                objectives: Sequence[str] = DEFAULT_OBJECTIVES,
                seed: int = 0,
@@ -198,12 +203,20 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
     batching   : "fused" packs a round's mapspaces into cross-architecture
                  batch_eval calls; "per-arch" keeps the seed explorer's
                  one-call-per-(arch, workload) path (bit-exact parity)
+    backend    : mapspace scoring engine (`core.backend`): "jnp" (oracle),
+                 "pallas" (kernels/mapspace_eval for no-bypass mapspaces,
+                 interpret mode off-TPU, jnp fallback otherwise), or
+                 "auto" (pallas iff a TPU is attached).  Participates in
+                 the result-cache key, so jnp- and pallas-scored entries
+                 never alias.
     cache      : ResultCache, a directory path for a persistent cache, or
                  None for a fresh in-memory cache
     """
+    from ..core.backend import resolve_backend
     if batching not in ("fused", "per-arch"):
         raise ValueError(f"batching must be 'fused' or 'per-arch', "
                          f"got {batching!r}")
+    backend = resolve_backend(backend)
     space = as_space(arch_space)
     workloads = task if isinstance(task, TaskWorkloads) else analyze(task)
     cfg = cfg or MapperConfig()
@@ -223,9 +236,11 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                           objectives=tuple(objectives), budget=budget,
                           space_size=space.size, best=None,   # type: ignore
                           best_coords=(), all_archs=[],
-                          pareto=ParetoFront(objectives), history=[])
+                          pareto=ParetoFront(objectives), history=[],
+                          backend=backend)
     evaluate = _Evaluator(space, workloads, cfg, goal, cache_level,
-                          use_batch, batching, cache, report)
+                          use_batch, batching, cache, report,
+                          backend=backend)
 
     memo: Dict[Coords, ArchResult] = {}
     best: Optional[ArchResult] = None

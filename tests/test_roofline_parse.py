@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.launch.roofline import (make_roofline, model_flops_estimate,
-                                   parse_collectives, parse_hlo_costs)
+                                   parse_collectives, parse_hlo_costs,
+                                   xla_cost_analysis)
 
 
 def _compile(f, *args):
@@ -27,7 +28,7 @@ def test_scan_flops_trip_weighted():
     got = parse_hlo_costs(c.as_text())
     assert got["flops"] == pytest.approx(10 * 2 * 128 ** 3)
     # XLA's own count misses the trip factor
-    assert c.cost_analysis().get("flops") < got["flops"]
+    assert xla_cost_analysis(c).get("flops") < got["flops"]
 
 
 def test_nested_scan_flops():
@@ -57,7 +58,7 @@ def test_unrolled_matches_xla_cost_analysis():
 
     c = _compile(h, x, w)
     got = parse_hlo_costs(c.as_text())
-    ca = c.cost_analysis()
+    ca = xla_cost_analysis(c)
     assert got["flops"] == pytest.approx(ca.get("flops"))
     assert got["bytes"] == pytest.approx(ca.get("bytes accessed"), rel=0.05)
 
