@@ -1,12 +1,15 @@
 """Beyond-paper: mapspace-evaluation throughput.
 
-The DSE bottleneck is scoring mappings.  Compares (a) the scalar Python
-evaluator (Timeloop-style), (b) the vectorized jnp batch evaluator,
-(c) the Pallas kernel in interpret mode (on TPU the same kernel runs on
-the VPU), and (d) cross-architecture fused batching
-(repro.search.batch_frontier): the mapspaces of several candidate
-architectures packed into one device call instead of one call per arch.
-Reported as microseconds per mapping."""
+The DSE bottleneck is the whole mapspace pipeline, not just scoring.
+Compares (a) the scalar Python evaluator (Timeloop-style), (b) the
+vectorized jnp batch evaluator, (c) the Pallas kernel in interpret mode
+(on TPU the same kernel runs on the VPU), (d) cross-architecture fused
+batching (repro.search.batch_frontier): the mapspaces of several
+candidate architectures packed into one device call instead of one call
+per arch, and (e) the array-native front-end
+(`core.mapspace_array.build_packed_mapspace`) against the legacy object
+constructor — construction + validation + packing, the part of DSE time
+the evaluator PRs never touched.  Reported as microseconds per mapping."""
 from __future__ import annotations
 
 import time
@@ -14,13 +17,14 @@ import time
 import numpy as np
 
 from repro.core import (MapperConfig, alexnet_cifar, analyze,
-                        build_mapspace, evaluate_mapping, make_spatial_arch)
+                        build_mapspace, build_packed_mapspace,
+                        evaluate_mapping, make_spatial_arch)
 from repro.core.batch_eval import evaluate_batch, make_static, pack
 
 from .common import Timer, claim
 
 
-def run(n=2000):
+def run(n=2000, max_mappings=20000):
     hw = make_spatial_arch(num_pes=256, rf_words=256, gbuf_words=64 * 1024,
                            bits=16, zero_skip=True)
     wl = analyze(alexnet_cifar(batch_size=16)).intra[2]
@@ -87,6 +91,28 @@ def run(n=2000):
     fused_us = min(_timed(lambda: fused_best(jobs, "edp"))
                    for _ in range(3)) * 1e6 / total
 
+    # (e) front-end: packed (array-native) vs object construction at the
+    # full sampling budget.  The object path's product is a Mapping list
+    # that every scorer must still pack(), so packing is part of its
+    # cost; the packed path's arrays are the scoring input as-is.
+    from repro.core.backend import score_mapspace
+    cfg_b = MapperConfig(max_mappings=max_mappings, seed=0,
+                         enable_bypass=True)
+    obj_s = min(_timed(lambda: build_mapspace(wl, hw, cfg_b))
+                for _ in range(2))
+    ms_obj = build_mapspace(wl, hw, cfg_b).mappings
+    pack_s = min(_timed(lambda: pack(ms_obj)) for _ in range(2))
+    pkd_s = min(_timed(lambda: build_packed_mapspace(wl, hw, cfg_b))
+                for _ in range(2))
+    pm = build_packed_mapspace(wl, hw, cfg_b)
+    nb = len(pm)
+    build_speedup = (obj_s + pack_s) / pkd_s
+    # construction-vs-scoring split of the packed pipeline: where does a
+    # fresh (arch, workload) evaluation spend its time now?
+    score_mapspace(pm, "edp", "jnp")                 # compile
+    pscore_s = min(_timed(lambda: score_mapspace(pm, "edp", "jnp"))
+                   for _ in range(3))
+
     res = {"n": n, "scalar_us": scalar_us, "batch_us": batch_us,
            "kernel_interpret_us": kernel_us,
            "speedup_batch": scalar_us / batch_us,
@@ -94,7 +120,13 @@ def run(n=2000):
            "backend_jnp_us": disp_jnp_us,
            "backend_pallas_us": disp_pal_us,
            "cross_arch_n": total, "single_arch_us": single_us,
-           "fused_us": fused_us, "fused_speedup": single_us / fused_us}
+           "fused_us": fused_us, "fused_speedup": single_us / fused_us,
+           "build_max_mappings": max_mappings, "build_n_survivors": nb,
+           "build_object_us": (obj_s + pack_s) * 1e6 / nb,
+           "build_packed_us": pkd_s * 1e6 / nb,
+           "build_speedup": build_speedup,
+           "packed_score_us": pscore_s * 1e6 / nb,
+           "packed_front_end_frac": pkd_s / (pkd_s + pscore_s)}
     claim(res, "backend dispatch overhead over batch_scores <= 25%",
           disp_jnp_us <= engine_us * 1.25,
           f"engine={engine_us:.2f}us dispatch={disp_jnp_us:.2f}us "
@@ -107,6 +139,12 @@ def run(n=2000):
           fused_us <= single_us,
           f"{single_us:.2f}us -> {fused_us:.2f}us per mapping "
           f"({res['fused_speedup']:.2f}x, {len(jobs)} archs fused)")
+    claim(res, "packed_build: array-native construction+validation >= 5x "
+          "the object path",
+          build_speedup >= 5.0,
+          f"{res['build_object_us']:.1f}us -> {res['build_packed_us']:.1f}"
+          f"us per mapping ({build_speedup:.1f}x at "
+          f"max_mappings={max_mappings}, {nb} survivors)")
     return res
 
 
@@ -131,4 +169,12 @@ def rows(res):
          f"4-arch loop, n={res['cross_arch_n']}"),
         ("mapspace_cross_arch_fused", res["fused_us"],
          f"speedup={res['fused_speedup']:.2f}x vs single-arch"),
+        ("mapspace_build_object", res["build_object_us"],
+         f"legacy constructor+validator+pack, "
+         f"max_mappings={res['build_max_mappings']}"),
+        ("mapspace_build_packed", res["build_packed_us"],
+         f"speedup={res['build_speedup']:.1f}x vs object front-end"),
+        ("mapspace_packed_score", res["packed_score_us"],
+         f"front-end is {res['packed_front_end_frac']:.0%} of "
+         f"build+score on the packed pipeline"),
     ]

@@ -32,6 +32,37 @@ def run(max_mappings=800, budget=9, seed=0, backend="auto"):
     out = {"space_size": space.size, "budget": budget, "backend": backend,
            "strategies": {}}
 
+    # end-to-end pipeline shootout on the same exhaustive sweep: legacy
+    # object front-end vs the array-native PackedMapspace pipeline
+    # (fresh caches each, legacy first so XLA compiles are charged to it)
+    t = Timer()
+    legacy = run_search(task, space, goal="edp", cfg=cfg,
+                        cache=ResultCache(), strategy="exhaustive",
+                        batching="fused", seed=seed, backend=backend,
+                        use_packed=False)
+    legacy_us = t.us()
+    t = Timer()
+    packed = run_search(task, space, goal="edp", cfg=cfg,
+                        cache=ResultCache(), strategy="exhaustive",
+                        batching="fused", seed=seed, backend=backend,
+                        use_packed=True)
+    packed_us = t.us()
+    out["pipeline"] = {"legacy_us": legacy_us, "packed_us": packed_us,
+                       "speedup": legacy_us / packed_us}
+    same_winners = (
+        legacy.best.hardware.name == packed.best.hardware.name
+        and legacy.goal_value() == packed.goal_value()
+        and all(a.mapping.factors == b.mapping.factors
+                and a.mapping.orders == b.mapping.orders
+                and a.mapping.bypass == b.mapping.bypass
+                for a, b in zip(legacy.best.per_workload,
+                                packed.best.per_workload)))
+    claim(out, "packed pipeline: bit-identical winners, lower run_search "
+          "wall time than the legacy object pipeline",
+          same_winners and packed_us <= legacy_us,
+          f"{legacy_us / 1e6:.2f}s -> {packed_us / 1e6:.2f}s "
+          f"({legacy_us / packed_us:.2f}x), same_winners={same_winners}")
+
     # full exhaustive sweep = ground-truth optimum (and warms the cache)
     t = Timer()
     full = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
@@ -80,7 +111,12 @@ def run(max_mappings=800, budget=9, seed=0, backend="auto"):
 def rows(res):
     r = [("search_exhaustive_full", res["optimum"]["us"],
           f"optimum={res['optimum']['edp']:.3e};"
-          f"enums={res['optimum']['n_enumerations']}")]
+          f"enums={res['optimum']['n_enumerations']}"),
+         ("search_pipeline_legacy", res["pipeline"]["legacy_us"],
+          "object front-end, fused scoring"),
+         ("search_pipeline_packed", res["pipeline"]["packed_us"],
+          f"speedup={res['pipeline']['speedup']:.2f}x, "
+          f"bit-identical winners")]
     for name, s in res["strategies"].items():
         r.append((f"search_{name}_b{res['budget']}", s["us"],
                   f"best={s['best_edp']:.3e};"

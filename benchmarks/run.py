@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV; exits non-zero if any paper claim
 fails.  ``--fast`` shrinks mapspace budgets for CI.
+
+Besides the per-run ``--json-out`` dump, every run rewrites a stable
+top-level ``BENCH_results.json`` (module -> {rows: {name: us_per_call},
+claims}) so the perf trajectory is machine-diffable across PRs:
+``git diff BENCH_results.json`` answers "what got faster/slower".
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ MODULES = [
     ("fig16_17_zero_skipping", {"max_mappings": 3000}),
     ("fig18_19_batch_size", {"max_mappings": 3000}),
     ("fig20_21_edp_dse", {"max_mappings": 1500}),
-    ("bench_mapspace_throughput", {}),
+    ("bench_mapspace_throughput", {"max_mappings": 20000}),
     ("bench_backend_dispatch", {"max_mappings": 2000}),
     ("bench_search_strategies", {"max_mappings": 800}),
     ("bench_trim_planner", {}),
@@ -39,6 +44,7 @@ def main() -> None:
     all_rows = []
     all_claims = []
     results = {}
+    bench_summary = {}
     failed = False
     for name, kw in MODULES:
         if args.only and args.only not in name:
@@ -57,8 +63,15 @@ def main() -> None:
         all_claims += res.get("claims", [])
         import jax
         jax.clear_caches()          # bound the XLA code-cache footprint
-        for row in mod.rows(res):
-            all_rows.append(row)
+        mod_rows = mod.rows(res)
+        all_rows += mod_rows
+        bench_summary[name] = {
+            # budget mode matters for cross-PR diffs: a --fast run must
+            # never silently overwrite full-budget numbers unnoticed
+            "mode": "fast" if args.fast else "full",
+            "rows": {r: round(us, 2) for r, us, _ in mod_rows},
+            "claims": res.get("claims", []),
+        }
 
     print("\nname,us_per_call,derived")
     for name, us, derived in all_rows:
@@ -77,6 +90,22 @@ def main() -> None:
             json.dump({"claims": all_claims,
                        "rows": [list(r) for r in all_rows]}, f, indent=1,
                       default=str)
+    # stable top-level snapshot: PR-over-PR perf trajectory, diffable.
+    # Partial runs (--only/--fast failures) merge into the existing file
+    # so one filtered run never drops the other modules' numbers.
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bench_path = os.path.join(root, "BENCH_results.json")
+    merged = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                merged = json.load(f)
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(bench_summary)
+    with open(bench_path, "w") as f:
+        json.dump(merged, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
     sys.exit(1 if failed else 0)
 
 

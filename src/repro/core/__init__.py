@@ -16,6 +16,7 @@ from .task_analyst import (Conv2D, FC, NETWORKS, Pool2D, TaskDescription,
                            resnet18_imagenet, resnet20_cifar, vgg11)
 from .mapping import Mapping
 from .mapper import MapperConfig, Mapspace, build_mapspace, validate
+from .mapspace_array import PackedMapspace, build_packed_mapspace
 from .evaluator import (Activity, Estimate, NetworkEstimate,
                         analyze_activity, evaluate_mapping, evaluate_network)
 from .backend import (BACKENDS, best_index, default_backend,

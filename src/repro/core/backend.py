@@ -11,6 +11,13 @@ pair) and routes each mapping to one of two numerically-matched engines:
     ``pl.pallas_call(..., interpret=True)`` so the code path is always
     testable; on TPU it compiles for the VPU.
 
+Batches are array-native end to end: a `core.mapspace_array.PackedMapspace`
+is consumed without any conversion, and a legacy `Sequence[Mapping]` is
+packed exactly once here — the packed arrays are shared by the kernel
+scorer, the jnp fallback, and the closed-form `validity_mask`, so no path
+re-packs (the seed packed twice: once in `ops.mapspace_eval`, once in
+`validity_mask`).
+
 The kernel's storage chains are the full memory hierarchy, so only
 *no-bypass* mappings are eligible.  Eligibility is detected per mapping:
 a ``backend="pallas"`` batch that mixes bypass and no-bypass mappings is
@@ -28,12 +35,12 @@ exactly.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batch_eval import (GOAL_KEY, batch_scores, make_static, pack,
-                         tile_words_np)
+from .batch_eval import (GOAL_KEY, HwStatic, batch_scores_arrays,
+                         make_static, pack, tile_words_np)
 from .mapping import Mapping
 
 BACKENDS = ("auto", "jnp", "pallas")
@@ -65,7 +72,12 @@ def pallas_eligible(mapping: Mapping) -> bool:
     return all(not b for b in mapping.bypass)
 
 
-def eligibility_mask(mappings: Sequence[Mapping]) -> np.ndarray:
+def eligibility_mask(mappings) -> np.ndarray:
+    """Per-row kernel eligibility for a Mapping sequence or a
+    `PackedMapspace`."""
+    from .mapspace_array import PackedMapspace
+    if isinstance(mappings, PackedMapspace):
+        return mappings.eligible
     return np.fromiter((pallas_eligible(m) for m in mappings), bool,
                        count=len(mappings))
 
@@ -79,14 +91,14 @@ def _kernel_block(n: int, block: int) -> int:
     return b
 
 
-def validity_mask(mappings: Sequence[Mapping]) -> np.ndarray:
-    """Fanout + buffer-capacity validity, formula-identical to the checks
-    in `evaluate_batch` (the pallas kernel does not emit validity)."""
-    st = make_static(mappings[0].hardware, mappings[0].workload)
-    factors, _, store = pack(mappings)
+def validity_mask_arrays(st: HwStatic, factors: np.ndarray,
+                         store: np.ndarray) -> np.ndarray:
+    """Fanout + buffer-capacity validity over packed arrays,
+    formula-identical to the checks in `evaluate_batch` (the pallas
+    kernel does not emit validity)."""
     f = np.asarray(factors, np.float64)
     store = np.asarray(store)
-    B, L, _ = f.shape
+    B = f.shape[0]
     valid = np.ones((B,), bool)
     for ri, r in enumerate(st.rout_idx):
         valid &= f[:, r, :].prod(axis=1) <= st.fanout[ri]
@@ -100,13 +112,37 @@ def validity_mask(mappings: Sequence[Mapping]) -> np.ndarray:
     return valid
 
 
-def _pallas_scores(mappings: List[Mapping], goal: str, block: int,
-                   interpret: Optional[bool]) -> np.ndarray:
-    from ..kernels.mapspace_eval.ops import mapspace_eval
+def validity_mask(mappings: Sequence[Mapping]) -> np.ndarray:
+    """Object-path wrapper over `validity_mask_arrays` (packs once)."""
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, _, store = pack(mappings)
+    return validity_mask_arrays(st, np.asarray(factors), np.asarray(store))
+
+
+def _as_arrays(mappings):
+    """Uniform array view of a batch: -> (st, factors, rank, store).
+    Packs a Mapping sequence exactly once; a PackedMapspace passes
+    through untouched.  Eligibility is NOT computed here — it is an
+    O(n) object walk on the legacy path and only the pallas engine
+    needs it."""
+    from .mapspace_array import PackedMapspace
+    if isinstance(mappings, PackedMapspace):
+        return (mappings.static, mappings.factors, mappings.rank,
+                mappings.store)
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, rank, store = pack(mappings)
+    return (st, np.asarray(factors), np.asarray(rank), np.asarray(store))
+
+
+def _pallas_scores_arrays(st: HwStatic, factors, rank, goal: str,
+                          block: int, interpret: Optional[bool]
+                          ) -> np.ndarray:
+    from ..kernels.mapspace_eval.ops import mapspace_eval_arrays
     if interpret is None:
         interpret = default_interpret()
-    cycles, energy = mapspace_eval(
-        mappings, block=_kernel_block(len(mappings), block),
+    n = factors.shape[0]
+    cycles, energy = mapspace_eval_arrays(
+        st, factors, rank, block=_kernel_block(n, block),
         interpret=interpret)
     if goal == "latency":
         return np.asarray(cycles, np.float64)
@@ -115,46 +151,52 @@ def _pallas_scores(mappings: List[Mapping], goal: str, block: int,
     return np.asarray(cycles, np.float64) * np.asarray(energy, np.float64)
 
 
-def score_mapspace(mappings: Sequence[Mapping], goal: str = "edp",
+def score_mapspace(mappings, goal: str = "edp",
                    backend: str = "auto", *, block: int = 256,
                    interpret: Optional[bool] = None
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """-> (scores [n], valid [n]); lower score is better, invalid rows
     carry their score (mask with `valid` before argmin).
 
-    All mappings must share one (hardware, workload) pair — the batch is
-    one mapspace.  `backend` is `auto`, `jnp`, or `pallas`; the pallas
-    engine scores the no-bypass rows with the kernel and falls back to the
-    jnp oracle for the rest.
+    `mappings` is a `Sequence[Mapping]` or a `PackedMapspace`; the batch
+    is one mapspace (one hardware/workload pair).  `backend` is `auto`,
+    `jnp`, or `pallas`; the pallas engine scores the no-bypass rows with
+    the kernel and falls back to the jnp oracle for the rest.
     """
-    if not mappings:
+    from .mapspace_array import PackedMapspace
+    is_packed = isinstance(mappings, PackedMapspace)
+    if not is_packed:
+        mappings = list(mappings)
+    if len(mappings) == 0:
         raise ValueError("score_mapspace: empty mapping batch")
     if goal not in GOAL_KEY:
         raise ValueError(f"goal must be one of {sorted(GOAL_KEY)}, "
                          f"got {goal!r}")
-    mappings = list(mappings)
     engine = resolve_backend(backend)
+    st, factors, rank, store = _as_arrays(mappings)
     if engine == "jnp":
-        scores, valid = batch_scores(mappings, goal)
+        scores, valid = batch_scores_arrays(st, factors, rank, store, goal)
         return np.asarray(scores, np.float64), np.asarray(valid, bool)
 
     mask = eligibility_mask(mappings)
-    scores = np.empty((len(mappings),), np.float64)
-    valid = np.empty((len(mappings),), bool)
+    n = factors.shape[0]
+    scores = np.empty((n,), np.float64)
+    valid = np.empty((n,), bool)
     if mask.any():
         idx = np.flatnonzero(mask)
-        sub = [mappings[i] for i in idx]
-        scores[idx] = _pallas_scores(sub, goal, block, interpret)
-        valid[idx] = validity_mask(sub)     # kernel emits no validity
+        scores[idx] = _pallas_scores_arrays(st, factors[idx], rank[idx],
+                                            goal, block, interpret)
+        valid[idx] = validity_mask_arrays(st, factors[idx], store[idx])
     if not mask.all():
         idx = np.flatnonzero(~mask)
-        s, v = batch_scores([mappings[i] for i in idx], goal)
+        s, v = batch_scores_arrays(st, factors[idx], rank[idx], store[idx],
+                                   goal)
         scores[idx] = np.asarray(s, np.float64)
         valid[idx] = np.asarray(v, bool)
     return scores, valid
 
 
-def best_index(mappings: Sequence[Mapping], goal: str = "edp",
+def best_index(mappings, goal: str = "edp",
                backend: str = "auto", *, block: int = 256,
                interpret: Optional[bool] = None) -> int:
     """Index of the goal-best *valid* mapping (ties break low, matching

@@ -727,9 +727,13 @@ def evaluate_batch_multi(sig: BatchSig, params, factors, rank, store):
             "pes_used": pes_used}
 
 
-def batch_scores(mappings: Sequence[Mapping], goal: str = "edp"):
-    st = make_static(mappings[0].hardware, mappings[0].workload)
-    factors, rank, store = pack(mappings)
+def batch_scores_arrays(st: HwStatic, factors, rank, store,
+                        goal: str = "edp"):
+    """`batch_scores` on pre-packed arrays (numpy or jnp); pads the
+    mapping axis to a power-of-2 bucket and evaluates one jit call."""
+    factors = jnp.asarray(factors)
+    rank = jnp.asarray(rank)
+    store = jnp.asarray(store)
     n = factors.shape[0]
     pad = _bucket(n) - n
     if pad:
@@ -741,8 +745,22 @@ def batch_scores(mappings: Sequence[Mapping], goal: str = "edp"):
     return np.asarray(out[key][:n]), np.asarray(out["valid"][:n])
 
 
-def batch_best_index(mappings: Sequence[Mapping], goal: str = "edp",
+def batch_scores(mappings, goal: str = "edp"):
+    """Score a mapspace (a `Sequence[Mapping]` — packed here exactly once
+    — or a pre-packed `core.mapspace_array.PackedMapspace`)."""
+    from .mapspace_array import PackedMapspace
+    if isinstance(mappings, PackedMapspace):
+        return batch_scores_arrays(mappings.static, mappings.factors,
+                                   mappings.rank, mappings.store, goal)
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, rank, store = pack(mappings)
+    return batch_scores_arrays(st, factors, rank, store, goal)
+
+
+def batch_best_index(mappings, goal: str = "edp",
                      backend: str = "jnp") -> int:
+    """Index of the goal-best valid mapping; `mappings` is a Mapping
+    sequence or a `PackedMapspace`."""
     if backend != "jnp":
         from .backend import best_index     # lazy: backend wraps this module
         return best_index(mappings, goal, backend)

@@ -70,13 +70,34 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
                          cfg: Optional[MapperConfig] = None,
                          goal: str = "edp",
                          use_batch: bool = True,
-                         backend: str = "jnp") -> WorkloadResult:
+                         backend: str = "jnp",
+                         use_packed: bool = False) -> WorkloadResult:
     """Search one workload's mapspace for the goal-optimal mapping.
 
     `backend` selects the batch scoring engine (`core.backend`): the seed
     default "jnp", "pallas" for the mapspace-eval kernel (no-bypass rows),
-    or "auto" (pallas iff a TPU is attached)."""
+    or "auto" (pallas iff a TPU is attached).
+
+    `use_packed=True` takes the array-native pipeline
+    (`core.mapspace_array`): vectorized construction/validation, batch
+    scoring over the packed arrays, and winner-only `Mapping`
+    materialization.  The default keeps the seed object path (bit-exact,
+    including the scalar-loop selection for tiny mapspaces)."""
     cfg = cfg or MapperConfig()
+    if use_packed:
+        from .batch_eval import batch_best_index
+        from .mapspace_array import build_packed_mapspace
+        pm = build_packed_mapspace(workload, hw, cfg)
+        if not len(pm):
+            raise RuntimeError(
+                f"empty valid mapspace for {workload.name} on {hw.name}")
+        idx = batch_best_index(pm, goal, backend=backend)
+        best_m = pm.materialize(idx)
+        best_e = evaluate_mapping(best_m)
+        return WorkloadResult(workload=workload, mapping=best_m,
+                              estimate=best_e,
+                              mapspace_size=pm.total_candidates,
+                              n_valid=pm.n_valid)
     space = build_mapspace(workload, hw, cfg)
     if not space.mappings:
         raise RuntimeError(
@@ -111,7 +132,8 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
                           goal: str = "edp",
                           cache_level: str = "Gbuf",
                           use_batch: bool = True,
-                          backend: str = "jnp") -> ArchResult:
+                          backend: str = "jnp",
+                          use_packed: bool = False) -> ArchResult:
     """Algorithm 1 lines 6-15 for one hardware description."""
     cfg = cfg or MapperConfig()
     cache: Dict[tuple, WorkloadResult] = {}
@@ -120,7 +142,8 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
         key = _workload_key(wl)
         if key not in cache:
             cache[key] = find_optimal_mapping(wl, hw, cfg, goal, use_batch,
-                                              backend=backend)
+                                              backend=backend,
+                                              use_packed=use_packed)
         r = cache[key]
         results.append(dataclasses.replace(r, workload=wl))
     max_buf = 0.0

@@ -10,7 +10,7 @@ register width; chain levels statically unrolled).
 Semantics: identical to core.batch_eval restricted to no-bypass mappings
 (storage chain = all memory levels) — including input halo credit, psum
 read-modify-write, NoC classification, and zero-skip energy discounts.
-The ops wrapper precomputes per mapping (cheap jnp):
+The ops wrapper precomputes per mapping (cheap numpy):
 
   bounds/cum [B,S]     slot loop bounds (nest order) and their cumprod
   rel_{i,w,o} [B,S]    relevance masks per tensor
@@ -22,8 +22,12 @@ The ops wrapper precomputes per mapping (cheap jnp):
   noc_e [B,L1,3]       NoC pJ/word per pair per tensor (0 if no crossing)
   noc_m [B,L1]         1 if the pair crosses a routing level
 
-and bakes static floats (bandwidths, energies, zero-skip factors, MAC
-costs) via functools.partial.
+The scoring math lives once, in `_score_body`, parameterized by how the
+hardware/workload constants are sourced: the single-arch kernel bakes
+them as static Python floats (functools.partial), the multi-arch variant
+reads them from per-row arrays (zsf [B, L1, 3], mem_par [B, Lm, 3],
+hw_row [B, 4]) so rows of any architectures sharing a structural
+BatchSig fuse into one call — the `evaluate_batch_multi` contract.
 """
 from __future__ import annotations
 
@@ -35,18 +39,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
-                  tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
-                  noc_e_ref, noc_m_ref,
-                  cycles_ref, energy_ref, *,
-                  vis: Tuple[int, ...],
-                  mem_bw: Tuple[float, ...],
-                  e_read: Tuple[float, ...], e_write: Tuple[float, ...],
-                  zs_parent: Tuple[int, ...],
-                  zf: Tuple[float, float, float],
-                  macs: float, macs_per_pe: float, pipeline: float,
-                  mac_energy: float, eff_macs: float, leak_rate: float,
-                  noc_bw: float, n_mem: int):
+def _score_body(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
+                tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
+                noc_e_ref, noc_m_ref, cycles_ref, energy_ref, *,
+                vis: Tuple[int, ...], n_mem: int,
+                zsf_of, mem_bw_of, e_read_of, e_write_of,
+                comp_cycles_of, dyn0_of, leak_of, noc_bw_of):
+    """The scoring pipeline, shared by both kernels.  The `*_of` getters
+    return either static Python floats (single-arch) or [Bm] row vectors
+    (multi-arch) — the math broadcasts identically."""
     bounds = bounds_ref[...]                    # [Bm, S]
     cum = cum_ref[...]
     rel = {0: rel_i_ref[...], 1: rel_w_ref[...], 2: rel_o_ref[...]}
@@ -58,7 +59,7 @@ def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
     writes = [jnp.zeros((bm,), jnp.float32) for _ in range(n_mem)]
     raw = [jnp.zeros((bm,), jnp.float32) for _ in range(n_mem)]
     noc_words = jnp.zeros((bm,), jnp.float32)
-    dyn = jnp.full((bm,), eff_macs * mac_energy, jnp.float32)
+    dyn = dyn0_of(bm)
 
     L1 = len(vis)
     for j in range(L1):
@@ -79,7 +80,7 @@ def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
             b_k = jnp.where(has, jnp.sum(bounds * oh, axis=1), 1.0)
             vv = p_k
             outer = p_k / b_k
-            zsf = zf[t] if zs_parent[j] else 1.0
+            zsf = zsf_of(j, t)
             ne = noc_e_ref[:, j, t]
             if t == 2:                                        # output
                 relk = jnp.where((r * jnp.where(pos <= k1[:, None], 1.0,
@@ -118,15 +119,75 @@ def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
                 dyn += nw * zsf * ne
 
     pes = ib_ref[:, L1 - 1]                     # instances at compute leaf
-    cycles = macs / (jnp.maximum(pes, 1.0) * macs_per_pe * pipeline)
+    cycles = comp_cycles_of(pes)
     for m in range(n_mem):
         inst_m = ia_ref[:, m]                   # parent of pair m = level m
-        cycles = jnp.maximum(cycles, raw[m] / (mem_bw[m] * inst_m))
-        dyn += reads[m] * e_read[m] + writes[m] * e_write[m]
-    cycles = jnp.maximum(cycles, noc_words / noc_bw)
-    energy = dyn + leak_rate * cycles
+        cycles = jnp.maximum(cycles, raw[m] / (mem_bw_of(m) * inst_m))
+        dyn += reads[m] * e_read_of(m) + writes[m] * e_write_of(m)
+    cycles = jnp.maximum(cycles, noc_words / noc_bw_of())
+    energy = dyn + leak_of() * cycles
     cycles_ref[...] = cycles
     energy_ref[...] = energy
+
+
+def _score_kernel(bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
+                  tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
+                  noc_e_ref, noc_m_ref,
+                  cycles_ref, energy_ref, *,
+                  vis: Tuple[int, ...],
+                  mem_bw: Tuple[float, ...],
+                  e_read: Tuple[float, ...], e_write: Tuple[float, ...],
+                  zs_parent: Tuple[int, ...],
+                  zf: Tuple[float, float, float],
+                  macs: float, macs_per_pe: float, pipeline: float,
+                  mac_energy: float, eff_macs: float, leak_rate: float,
+                  noc_bw: float, n_mem: int):
+    """Single-arch kernel: hardware constants baked as static floats."""
+    _score_body(
+        bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
+        tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
+        noc_e_ref, noc_m_ref, cycles_ref, energy_ref,
+        vis=vis, n_mem=n_mem,
+        zsf_of=lambda j, t: zf[t] if zs_parent[j] else 1.0,
+        mem_bw_of=lambda m: mem_bw[m],
+        e_read_of=lambda m: e_read[m],
+        e_write_of=lambda m: e_write[m],
+        comp_cycles_of=lambda pes: macs / (jnp.maximum(pes, 1.0)
+                                           * macs_per_pe * pipeline),
+        dyn0_of=lambda bm: jnp.full((bm,), eff_macs * mac_energy,
+                                    jnp.float32),
+        leak_of=lambda: leak_rate,
+        noc_bw_of=lambda: noc_bw)
+
+
+def _score_kernel_multi(bounds_ref, cum_ref, rel_i_ref, rel_w_ref,
+                        rel_o_ref, tw_u_ref, tw_p_ref, fresh_ref, ia_ref,
+                        ib_ref, noc_e_ref, noc_m_ref, zsf_ref, mem_par_ref,
+                        hw_row_ref, cycles_ref, energy_ref, *,
+                        vis: Tuple[int, ...], n_mem: int):
+    """Multi-architecture kernel: the same scoring body with per-row
+    hardware/workload constants (same contract as
+    `core.batch_eval.evaluate_batch_multi`):
+
+      zsf     [Bm, L1, 3]  zero-skip factor per chain pair per tensor
+      mem_par [Bm, Lm, 3]  (bandwidth, read_e, write_e) per memory level
+      hw_row  [Bm, 4]      (comp_scale, eff_mac_pj, leak_rate, noc_bw)
+                           with comp_scale = macs / (macs_per_pe * pipe)
+    """
+    _score_body(
+        bounds_ref, cum_ref, rel_i_ref, rel_w_ref, rel_o_ref,
+        tw_u_ref, tw_p_ref, fresh_ref, ia_ref, ib_ref,
+        noc_e_ref, noc_m_ref, cycles_ref, energy_ref,
+        vis=vis, n_mem=n_mem,
+        zsf_of=lambda j, t: zsf_ref[:, j, t],
+        mem_bw_of=lambda m: mem_par_ref[:, m, 0],
+        e_read_of=lambda m: mem_par_ref[:, m, 1],
+        e_write_of=lambda m: mem_par_ref[:, m, 2],
+        comp_cycles_of=lambda pes: hw_row_ref[:, 0]
+        / jnp.maximum(pes, 1.0),
+        dyn0_of=lambda bm: hw_row_ref[:, 1],
+        leak_of=lambda: hw_row_ref[:, 2],
+        noc_bw_of=lambda: hw_row_ref[:, 3])
 
 
 def mapspace_eval_fwd(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
@@ -162,3 +223,45 @@ def mapspace_eval_fwd(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
         interpret=interpret,
     )(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh, ia, ib,
       noc_e, noc_m)
+
+
+def mapspace_eval_multi_fwd(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p,
+                            fresh, ia, ib, noc_e, noc_m, zsf, mem_par,
+                            hw_row, *, static: dict, block: int = 256,
+                            interpret: bool = False):
+    """Multi-architecture forward: the twelve per-mapping tensors plus
+    per-row hardware arrays (zsf [B, L1, 3], mem_par [B, Lm, 3],
+    hw_row [B, 4]).  All array args share the leading mapping axis B
+    (a multiple of `block`).  Returns (cycles [B], energy [B])."""
+    b, s = bounds.shape
+    l1 = tw_u.shape[1]
+    n_mem = mem_par.shape[1]
+    assert b % block == 0, (b, block)
+    grid = (b // block,)
+    kern = functools.partial(_score_kernel_multi, **static)
+    row = lambda i: (i, 0)
+    row3 = lambda i: (i, 0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, s), row), pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, s), row), pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, s), row),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1, s), row3),
+            pl.BlockSpec((block, l1), row), pl.BlockSpec((block, l1), row),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, l1), row),
+            pl.BlockSpec((block, l1, 3), row3),
+            pl.BlockSpec((block, n_mem, 3), row3),
+            pl.BlockSpec((block, 4), row),
+        ],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32),
+                   jax.ShapeDtypeStruct((b,), jnp.float32)],
+        interpret=interpret,
+    )(bounds, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh, ia, ib,
+      noc_e, noc_m, zsf, mem_par, hw_row)

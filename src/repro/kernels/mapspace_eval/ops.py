@@ -1,25 +1,35 @@
-"""Jit'd wrapper: Mapping objects -> kernel arrays -> (cycles, energy).
+"""Jit'd wrappers: packed mapspace arrays -> kernel tensors -> scores.
 
-Precomputes the per-mapping tensors described in kernel.py (cheap jnp) and
-bakes hardware constants statically.  Only no-bypass mappings are accepted
-(the kernel's storage chains are the full memory hierarchy); the general
-path is core.batch_eval, and `core.backend.score_mapspace` dispatches
-between the two with per-mapping eligibility gating.
+Precomputes the per-mapping tensors described in kernel.py (cheap numpy)
+from packed `(factors, rank)` arrays.  Three entry points:
+
+  * `mapspace_eval(mappings, ...)`        — legacy object API (packs once);
+  * `mapspace_eval_arrays(st, f, r, ...)` — pre-packed arrays, one
+    hardware/workload pair baked statically (single-arch kernel);
+  * `mapspace_eval_multi(groups, ...)`    — cross-architecture batches:
+    rows from several `(HwStatic, factors, rank)` groups sharing one
+    `BatchSig` fuse into ONE kernel call with per-row hardware constants
+    (same contract as `core.batch_eval.evaluate_batch_multi`).
+
+Only no-bypass mappings are accepted (the kernel's storage chains are the
+full memory hierarchy); the general path is core.batch_eval, and
+`core.backend.score_mapspace` dispatches between the two with per-mapping
+eligibility gating.
 """
 from __future__ import annotations
 
 import math
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ...core.batch_eval import (RELEVANT, SLIDING, HwStatic, make_static,
-                                pack, tile_words_np as _tile_words_np)
+                                pack, sig_of,
+                                tile_words_np as _tile_words_np)
 from ...core.mapping import Mapping
 from ...core.workload import N_, M_, C_, R_, S_, E_, F_
-from .kernel import mapspace_eval_fwd
+from .kernel import mapspace_eval_fwd, mapspace_eval_multi_fwd
 
 
 def _fresh_np(st: HwStatic, tile, d):
@@ -37,13 +47,11 @@ def _fresh_np(st: HwStatic, tile, d):
     return n * c * p * np.minimum(q, s * ds)
 
 
-def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
-    hw = mappings[0].hardware
-    wl = mappings[0].workload
-    for m in mappings:
-        assert all(not b for b in m.bypass), "kernel path is no-bypass only"
-    st = make_static(hw, wl)
-    factors, rank, _ = pack(mappings)
+def _mapping_rows(st: HwStatic, factors: np.ndarray, rank: np.ndarray):
+    """The twelve per-mapping kernel tensors (numpy) for one hardware/
+    workload pair.  Shared by the single-arch packer (which bakes the
+    hardware numerics statically) and the multi-arch packer (which turns
+    them into per-row arrays)."""
     factors = np.asarray(factors, np.float32)
     rank = np.asarray(rank)
     B, L, _ = factors.shape
@@ -112,9 +120,7 @@ def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
                 fr[:, None], (B, S))[slot_dim == d]
         if crossed:
             noc_m[:, jj] = 1.0
-            for ri, r in enumerate(rout):
-                if r not in crossed:
-                    continue
+            for r in crossed:
                 sp = factors[:, r, :]
                 m_w = (sp[:, [N_, E_, F_]] > 1).any(1)
                 m_i = sp[:, M_] > 1
@@ -124,36 +130,137 @@ def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
                 noc_e[:, jj, 1] += np.where(m_w, st.multi_e[k], st.uni_e[k])
                 noc_e[:, jj, 2] += np.where(a_o, st.acc_e[k], st.uni_e[k])
 
+    arrays = [slot_bound, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
+              ia, ib, noc_e, noc_m]
+    return arrays, tuple(zs_parent), Lm, L1, S
+
+
+def _hw_numerics(st: HwStatic):
+    """The scalar hardware/workload numerics the single-arch kernel bakes
+    statically (and the multi-arch kernel reads as per-row arrays)."""
     macs = float(math.prod(st.dims))
     nz = (1.0 - st.in_zf) * (1.0 - (st.w_zf if st.has_weight else 0.0))
     eff = macs * nz if st.zs_boundary >= 0 else macs
     zf = (1.0 - st.in_zf,
           1.0 - (st.w_zf if st.has_weight else 0.0), 1.0)
+    return dict(
+        macs=macs, eff_macs=eff, zf=zf,
+        macs_per_pe=float(st.macs_per_pe), pipeline=float(st.pipeline),
+        mac_energy=float(st.mac_e),
+        leak_rate=float(sum(st.leak) + st.pe_leak * st.num_pes),
+        noc_bw=float(st.noc_bw[0]) if st.noc_bw else 1e30,
+        mem_bw=tuple(st.bandwidths), e_read=tuple(st.read_e),
+        e_write=tuple(st.write_e))
+
+
+def _pad_block(arrays, B: int, block: int):
+    pad = (-B) % block
+    if not pad:
+        return arrays
+    return [np.concatenate([a, np.repeat(a[:1], pad, 0)], 0)
+            for a in arrays]
+
+
+def pack_for_kernel_arrays(st: HwStatic, factors, rank, block: int = 256):
+    """Pre-packed arrays -> (kernel arrays, static dict, n) for the
+    single-arch kernel."""
+    arrays, zs_parent, Lm, L1, _ = _mapping_rows(st, factors, rank)
+    B = arrays[0].shape[0]
+    hw = _hw_numerics(st)
     static = dict(
         vis=tuple((jj + 1) * 7 for jj in range(L1)),
-        mem_bw=tuple(st.bandwidths), e_read=tuple(st.read_e),
-        e_write=tuple(st.write_e), zs_parent=tuple(zs_parent), zf=zf,
-        macs=macs, macs_per_pe=float(st.macs_per_pe),
-        pipeline=float(st.pipeline), mac_energy=float(st.mac_e),
-        eff_macs=eff,
-        leak_rate=float(sum(st.leak) + st.pe_leak * st.num_pes),
-        noc_bw=float(st.noc_bw[0]) if st.noc_bw else 1e30, n_mem=Lm)
-
-    # pad mapping axis to a block multiple
-    pad = (-B) % block
-    def padv(a):
-        return np.concatenate([a, np.repeat(a[:1], pad, 0)], 0) if pad \
-            else a
-    arrays = [slot_bound, cum, rel_i, rel_w, rel_o, tw_u, tw_p, fresh,
-              ia, ib, noc_e, noc_m]
-    arrays = [jnp.asarray(padv(a)) for a in arrays]
+        mem_bw=hw["mem_bw"], e_read=hw["e_read"], e_write=hw["e_write"],
+        zs_parent=zs_parent, zf=hw["zf"],
+        macs=hw["macs"], macs_per_pe=hw["macs_per_pe"],
+        pipeline=hw["pipeline"], mac_energy=hw["mac_energy"],
+        eff_macs=hw["eff_macs"], leak_rate=hw["leak_rate"],
+        noc_bw=hw["noc_bw"], n_mem=Lm)
+    arrays = [jnp.asarray(a) for a in _pad_block(arrays, B, block)]
     return arrays, static, B
+
+
+def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
+    """Legacy object API: packs the mappings once, then defers to
+    `pack_for_kernel_arrays`."""
+    for m in mappings:
+        assert all(not b for b in m.bypass), "kernel path is no-bypass only"
+    st = make_static(mappings[0].hardware, mappings[0].workload)
+    factors, rank, _ = pack(mappings)
+    return pack_for_kernel_arrays(st, np.asarray(factors),
+                                  np.asarray(rank), block)
+
+
+def mapspace_eval_arrays(st: HwStatic, factors, rank, *, block: int = 256,
+                         interpret: bool = False):
+    """-> (cycles [n], energy [n]) float32 arrays from packed arrays."""
+    arrays, static, n = pack_for_kernel_arrays(st, factors, rank, block)
+    cycles, energy = mapspace_eval_fwd(*arrays, static=static, block=block,
+                                       interpret=interpret)
+    return np.asarray(cycles[:n]), np.asarray(energy[:n])
 
 
 def mapspace_eval(mappings: Sequence[Mapping], *, block: int = 256,
                   interpret: bool = False):
-    """-> (cycles [n], energy [n]) float32 arrays."""
+    """-> (cycles [n], energy [n]) float32 arrays (legacy object API)."""
     arrays, static, n = pack_for_kernel(mappings, block)
     cycles, energy = mapspace_eval_fwd(*arrays, static=static, block=block,
                                        interpret=interpret)
+    return np.asarray(cycles[:n]), np.asarray(energy[:n])
+
+
+# ---------------------------------------------------------------------------
+# multi-architecture fused kernel batches
+# ---------------------------------------------------------------------------
+def pack_for_kernel_multi(groups: List[Tuple[HwStatic, np.ndarray,
+                                             np.ndarray]],
+                          block: int = 256):
+    """Rows of several single-(arch, workload) groups -> one fused kernel
+    batch with per-row hardware constants.
+
+    Every group must share the structural `BatchSig` (level layout,
+    tensor set, depthwise) — exactly the `evaluate_batch_multi` contract;
+    the numeric hardware/workload constants become [B, ...] arrays:
+
+      zsf     [B, L1, 3]  zero-skip factor per chain pair per tensor
+      mem_par [B, Lm, 3]  (bandwidth, read_e, write_e) per memory level
+      hw_row  [B, 4]      (comp_scale, eff_mac_pj, leak_rate, noc_bw)
+                          with comp_scale = macs / (macs_per_pe * pipeline)
+    """
+    sig0 = sig_of(groups[0][0])
+    per_group = []
+    for st, factors, rank in groups:
+        assert sig_of(st) == sig0, "kernel groups must share a BatchSig"
+        arrays, zs_parent, Lm, L1, _ = _mapping_rows(st, factors, rank)
+        B = arrays[0].shape[0]
+        hw = _hw_numerics(st)
+        zsf = np.ones((B, L1, 3), np.float32)
+        for jj in range(L1):
+            if zs_parent[jj]:
+                zsf[:, jj, :] = np.asarray(hw["zf"], np.float32)
+        mem_par = np.broadcast_to(
+            np.stack([hw["mem_bw"], hw["e_read"], hw["e_write"]],
+                     axis=-1).astype(np.float32), (B, Lm, 3)).copy()
+        hw_row = np.broadcast_to(np.asarray(
+            [hw["macs"] / (hw["macs_per_pe"] * hw["pipeline"]),
+             hw["eff_macs"] * hw["mac_energy"],
+             hw["leak_rate"], hw["noc_bw"]], np.float32), (B, 4)).copy()
+        per_group.append(arrays + [zsf, mem_par, hw_row])
+    fused = [np.concatenate(parts, axis=0)
+             for parts in zip(*per_group)]
+    B = fused[0].shape[0]
+    Lm = len(sig0.mem_idx)
+    static = dict(vis=tuple((jj + 1) * 7 for jj in range(Lm)), n_mem=Lm)
+    fused = [jnp.asarray(a) for a in _pad_block(fused, B, block)]
+    return fused, static, B
+
+
+def mapspace_eval_multi(groups: List[Tuple[HwStatic, np.ndarray,
+                                           np.ndarray]], *,
+                        block: int = 256, interpret: bool = False):
+    """-> (cycles [n], energy [n]) over the concatenated group rows, one
+    kernel call for the whole cross-architecture batch."""
+    fused, static, n = pack_for_kernel_multi(groups, block)
+    cycles, energy = mapspace_eval_multi_fwd(*fused, static=static,
+                                             block=block,
+                                             interpret=interpret)
     return np.asarray(cycles[:n]), np.asarray(energy[:n])

@@ -14,7 +14,7 @@ Layers on top of repro.core's Algorithm-1 machinery:
 """
 from .batch_frontier import JobBest, MapspaceJob, fused_best, per_arch_best
 from .cache import ResultCache, cache_key, decode_result, encode_result
-from .driver import SearchReport, run_search
+from .driver import SearchReport, auto_round_size, run_search
 from .pareto import (DEFAULT_OBJECTIVES, OBJECTIVES, ParetoFront,
                      ParetoPoint, dominates, objective_values, scalarize)
 from .space import ArchSpace, as_space

@@ -10,11 +10,16 @@ into a single `evaluate_batch_multi` device call with per-mapping hardware
 constants.  Every architecture from one Designer template (e.g. the paper's
 PEs x RF x Gbuf lattice) shares one signature, so a whole round usually
 fuses into one call per workload *shape family*, not per architecture.
+
+Jobs carry either a `core.mapspace_array.PackedMapspace` (the primary,
+array-native representation — zero packing happens here) or a legacy
+`Mapping` list (packed exactly once, then treated identically); group
+evaluation *concatenates* the per-job arrays instead of re-packing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,20 +34,65 @@ GOAL_KEY = {"latency": "cycles", "energy": "energy_pj", "edp": "edp"}
 
 @dataclasses.dataclass
 class MapspaceJob:
-    """One pending mapspace search: pick the goal-best mapping of
-    `mappings` (all on the same hw/workload)."""
+    """One pending mapspace search: pick the goal-best mapping of the
+    job's mapspace (all on the same hw/workload).  Provide either
+    `mappings` (legacy objects) or `packed` (array-native)."""
     tag: object                       # caller identity, returned with result
     hw: HardwareDesc
     workload: Workload
-    mappings: List[Mapping]
+    mappings: Optional[List[Mapping]] = None
+    packed: Optional["object"] = None           # PackedMapspace
+
+    def n_rows(self) -> int:
+        if self.packed is not None:
+            return len(self.packed)
+        return len(self.mappings or [])
 
 
 @dataclasses.dataclass
 class JobBest:
     tag: object
-    index: int                        # argmin into job.mappings
+    index: int                        # argmin into the job's mapspace
     value: float                      # goal score of the winner (f32 path)
     n_scored: int
+
+
+@dataclasses.dataclass
+class _JobArrays:
+    """Packed view of one job (computed at most once per job)."""
+    st: object                        # HwStatic
+    factors: np.ndarray
+    rank: np.ndarray
+    store: np.ndarray
+    eligible: np.ndarray
+
+
+def _job_arrays(job: MapspaceJob, need_eligibility: bool) -> _JobArrays:
+    from ..core.backend import eligibility_mask
+    if job.packed is not None:
+        p = job.packed
+        return _JobArrays(p.static, p.factors, p.rank, p.store, p.eligible)
+    st = make_static(job.hw, job.workload)
+    factors, rank, store = pack(job.mappings)
+    elig = (eligibility_mask(job.mappings) if need_eligibility
+            else np.zeros((len(job.mappings),), bool))
+    return _JobArrays(st, np.asarray(factors), np.asarray(rank),
+                      np.asarray(store), elig)
+
+
+def _chunk(idxs: List[int], sizes: Dict[int, int],
+           max_group: int) -> List[List[int]]:
+    """Split a job-index group so no chunk exceeds `max_group` rows."""
+    chunks: List[List[int]] = [[]]
+    rows = 0
+    for i in idxs:
+        n = sizes[i]
+        if chunks[-1] and rows + n > max_group:
+            chunks.append([])
+            rows = 0
+        chunks[-1].append(i)
+        rows += n
+    return chunks
 
 
 def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
@@ -57,72 +107,88 @@ def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
 
     With `backend="pallas"` (or "auto" resolving to pallas), jobs whose
     whole mapspace is kernel-eligible (no-bypass mappings — the Pallas
-    kernel's storage-chain assumption) are scored one `mapspace_eval`
-    kernel call per job; the remaining jobs keep the fused
-    `evaluate_batch_multi` path, so a round that mixes bypass and
-    no-bypass mapspaces still fuses everything the kernel cannot take.
+    kernel's storage-chain assumption) are fused per BatchSig group into
+    ONE `mapspace_eval_multi` kernel call with per-row hardware
+    constants; the remaining jobs keep the fused `evaluate_batch_multi`
+    path, so a round that mixes bypass and no-bypass mapspaces still
+    fuses everything the kernel cannot take.
     """
-    from ..core.backend import eligibility_mask, resolve_backend
+    from ..core.backend import resolve_backend
     engine = resolve_backend(backend)
 
     key = GOAL_KEY[goal]
     groups: Dict[object, List[int]] = {}
-    statics = []
-    kernel_jobs: List[int] = []
+    kernel_groups: Dict[object, List[int]] = {}
+    arrays: List[Optional[_JobArrays]] = [None] * len(jobs)
+    sizes: Dict[int, int] = {}
     out: List[Optional[JobBest]] = [None] * len(jobs)
     for i, job in enumerate(jobs):
-        if not job.mappings:
-            raise ValueError(f"job {job.tag!r}: empty mapping list")
-        if engine == "pallas" and eligibility_mask(job.mappings).all():
-            kernel_jobs.append(i)
-            statics.append(None)        # keep statics job-indexed
-            continue
-        st = make_static(job.hw, job.workload)
-        statics.append(st)
-        groups.setdefault(sig_of(st), []).append(i)
+        if not job.n_rows():
+            raise ValueError(f"job {job.tag!r}: empty mapspace")
+        a = _job_arrays(job, need_eligibility=engine == "pallas")
+        arrays[i] = a
+        sizes[i] = a.factors.shape[0]
+        if engine == "pallas" and a.eligible.all():
+            kernel_groups.setdefault(sig_of(a.st), []).append(i)
+        else:
+            groups.setdefault(sig_of(a.st), []).append(i)
 
-    for i in kernel_jobs:
-        out[i] = _kernel_best(jobs[i], goal)
+    for sig, idxs in kernel_groups.items():
+        for chunk in _chunk(idxs, sizes, max_group):
+            _kernel_group(chunk, jobs, arrays, goal, out)
 
     for sig, idxs in groups.items():
-        # split oversized groups so padding/bucketing stays bounded
-        chunks: List[List[int]] = [[]]
-        rows = 0
-        for i in idxs:
-            n = len(jobs[i].mappings)
-            if chunks[-1] and rows + n > max_group:
-                chunks.append([])
-                rows = 0
-            chunks[-1].append(i)
-            rows += n
-        for chunk in chunks:
-            _eval_group(sig, chunk, jobs, statics, key, out)
+        for chunk in _chunk(idxs, sizes, max_group):
+            _eval_group(sig, chunk, jobs, arrays, key, out)
     return [b for b in out if b is not None]
 
 
-def _kernel_best(job: MapspaceJob, goal: str) -> JobBest:
-    """Score one all-eligible job with the Pallas mapspace kernel
-    (interpret mode off-TPU), matching the +inf-invalid / low-tie
-    selection semantics of the fused path."""
-    from ..core.backend import score_mapspace
-    scores, valid = score_mapspace(job.mappings, goal, "pallas")
-    scores = np.where(valid, scores, np.inf)
-    best = int(np.argmin(scores))
-    return JobBest(tag=job.tag, index=best, value=float(scores[best]),
-                   n_scored=len(job.mappings))
+def _kernel_group(idxs: List[int], jobs, arrays: List[_JobArrays],
+                  goal: str, out: List[Optional[JobBest]]) -> None:
+    """Score one BatchSig group of kernel-eligible jobs with a single
+    multi-architecture `mapspace_eval_multi` call (interpret mode
+    off-TPU), matching the +inf-invalid / low-tie selection semantics of
+    the fused path.  Validity is closed-form per job (the kernel emits
+    only cycles/energy)."""
+    from ..core.backend import (_kernel_block, default_interpret,
+                                validity_mask_arrays)
+    from ..kernels.mapspace_eval import ops as _kernel_ops
+
+    counts = [arrays[i].factors.shape[0] for i in idxs]
+    total = sum(counts)
+    cycles, energy = _kernel_ops.mapspace_eval_multi(
+        [(arrays[i].st, arrays[i].factors, arrays[i].rank) for i in idxs],
+        block=_kernel_block(total, 256), interpret=default_interpret())
+    cycles = np.asarray(cycles, np.float64)
+    energy = np.asarray(energy, np.float64)
+    if goal == "latency":
+        scores = cycles
+    elif goal == "energy":
+        scores = energy
+    else:
+        scores = cycles * energy
+    off = 0
+    for i, cnt in zip(idxs, counts):
+        seg = scores[off: off + cnt].copy()
+        valid = validity_mask_arrays(arrays[i].st, arrays[i].factors,
+                                     arrays[i].store)
+        seg[~valid] = np.inf
+        best = int(np.argmin(seg))
+        out[i] = JobBest(tag=jobs[i].tag, index=best,
+                         value=float(seg[best]), n_scored=cnt)
+        off += cnt
 
 
-def _eval_group(sig, idxs: List[int], jobs, statics, key: str,
-                out: List[Optional[JobBest]]) -> None:
+def _eval_group(sig, idxs: List[int], jobs, arrays: List[_JobArrays],
+                key: str, out: List[Optional[JobBest]]) -> None:
     import jax.numpy as jnp
 
-    counts = [len(jobs[i].mappings) for i in idxs]
-    packed = [pack(jobs[i].mappings) for i in idxs]
-    factors = np.concatenate([np.asarray(p[0]) for p in packed])
-    rank = np.concatenate([np.asarray(p[1]) for p in packed])
-    store = np.concatenate([np.asarray(p[2]) for p in packed])
+    counts = [arrays[i].factors.shape[0] for i in idxs]
+    factors = np.concatenate([arrays[i].factors for i in idxs])
+    rank = np.concatenate([arrays[i].rank for i in idxs])
+    store = np.concatenate([arrays[i].store for i in idxs])
     params = {}
-    per_job = [params_of(statics[i], n) for i, n in zip(idxs, counts)]
+    per_job = [params_of(arrays[i].st, n) for i, n in zip(idxs, counts)]
     for name in per_job[0]:
         params[name] = np.concatenate([p[name] for p in per_job])
 
@@ -156,7 +222,8 @@ def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
     """Seed-semantics fallback: one `batch_best_index` (or scalar loop)
     per job — exactly the explorer's `find_optimal_mapping` selection.
     A non-jnp `backend` swaps the batch scorer (`core.backend`) while
-    keeping the per-job dispatch shape."""
+    keeping the per-job dispatch shape.  Packed jobs keep the same
+    selection semantics (the scalar loop materializes lazily)."""
     import math as _math
 
     from ..core.batch_eval import batch_best_index
@@ -166,12 +233,14 @@ def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
     score = GOALS[goal]
     out: List[JobBest] = []
     for job in jobs:
+        batch = job.packed if job.packed is not None else job.mappings
+        mat = (job.packed.materialize if job.packed is not None
+               else job.mappings.__getitem__)
         best_i = None
-        if use_batch and len(job.mappings) >= 64:
+        if use_batch and job.n_rows() >= 64:
             try:
-                best_i = batch_best_index(job.mappings, goal,
-                                          backend=backend)
-                best_v = score(evaluate_mapping(job.mappings[best_i]))
+                best_i = batch_best_index(batch, goal, backend=backend)
+                best_v = score(evaluate_mapping(mat(best_i)))
             except Exception:
                 if backend != "jnp":
                     raise           # an explicit engine must fail loudly —
@@ -181,10 +250,10 @@ def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
         if best_i is None:
             best_v = _math.inf
             best_i = 0
-            for i, m in enumerate(job.mappings):
-                v = score(evaluate_mapping(m))
+            for i in range(job.n_rows()):
+                v = score(evaluate_mapping(mat(i)))
                 if v < best_v:
                     best_i, best_v = i, v
         out.append(JobBest(tag=job.tag, index=best_i, value=best_v,
-                           n_scored=len(job.mappings)))
+                           n_scored=job.n_rows()))
     return out

@@ -33,7 +33,9 @@ from ..core.mapper import MapperConfig
 from ..core.mapping import Mapping
 from ..core.workload import Workload
 
-CACHE_FORMAT = 2        # v2: backend joined the key scheme
+CACHE_FORMAT = 3        # v3: packed-mapspace digest joined the key scheme
+GC_LOCK = ".gc.lock"    # cross-process guard for the disk-tier GC
+GC_LOCK_STALE_S = 600.0  # a lock older than this is a dead process's
 
 
 # ---------------------------------------------------------------------------
@@ -65,7 +67,8 @@ def _cfg_sig(cfg: MapperConfig) -> Dict[str, Any]:
 
 def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
               goal: str, scorer: str = "per-arch",
-              backend: str = "jnp") -> str:
+              backend: str = "jnp",
+              mapspace: Optional[str] = None) -> str:
     """`scorer` is the selection path ("per-arch" seed semantics vs
     "fused" cross-arch batching) and `backend` the scoring engine ("jnp"
     oracle vs "pallas" mapspace kernel — pass the *resolved* engine, not
@@ -73,10 +76,18 @@ def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
     different f32 evaluation orders, so entries are not interchangeable
     across paths — keying on both keeps per-arch/jnp runs bit-exact with
     the seed explorer even on a shared cache, and jnp/pallas results can
-    never alias each other."""
+    never alias each other.
+
+    `mapspace` is the content digest of the packed candidate arrays
+    (`PackedMapspace.digest()`): the array-native pipeline keys entries
+    on the mapspace that was actually scored instead of trusting the
+    mapper config to describe it, so any change to the candidate
+    generator invalidates stale winners automatically."""
     payload = {"v": CACHE_FORMAT, "workload": _workload_sig(wl),
                "hw": _hw_sig(hw), "cfg": _cfg_sig(cfg), "goal": goal,
                "scorer": scorer, "backend": backend}
+    if mapspace is not None:
+        payload["mapspace"] = mapspace
     blob = json.dumps(payload, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -218,14 +229,92 @@ class ResultCache:
                 or (self.max_disk_bytes is not None
                     and self._est_bytes > self.max_disk_bytes))
 
+    # -- cross-process GC guard -----------------------------------------
+    # Entry writes are already safe across processes (os.replace only —
+    # readers never see a torn file, concurrent writers of one key are
+    # last-wins over identical content-addressed values).  GC is the one
+    # mutating sweep: two processes GC'ing concurrently could both scan,
+    # both evict, and double-count — so it runs under an O_EXCL lockfile.
+    # A holder that dies leaves the lock behind; locks older than
+    # GC_LOCK_STALE_S are broken and retaken.
+    def _lock_file(self) -> str:
+        return os.path.join(self.path, GC_LOCK)
+
+    def _try_lock(self) -> bool:
+        import time
+        lock = self._lock_file()
+        for _ in range(2):              # second try after breaking a stale
+            try:
+                fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    age = time.time() - os.path.getmtime(lock)
+                except FileNotFoundError:
+                    continue            # holder just released; retry
+                if age <= GC_LOCK_STALE_S:
+                    return False        # live holder: skip this GC
+                # break the dead process's lock via rename: of the
+                # processes that observed it stale, one wins the rename
+                # and the losers see ENOENT and back off.  The stat and
+                # the rename are not atomic, so the renamed file might be
+                # a *fresh* lock some other breaker re-created in the
+                # window — re-check the claimed file's age and, if we
+                # stole a live lock, put it back with os.link (atomic,
+                # never clobbers a newer lock) and back off.
+                claim = f"{lock}.stale.{os.getpid()}"
+                try:
+                    os.rename(lock, claim)
+                except (FileNotFoundError, OSError):
+                    return False        # another process is breaking it
+                try:
+                    stolen = time.time() - os.path.getmtime(claim)
+                except FileNotFoundError:
+                    continue
+                if stolen <= GC_LOCK_STALE_S:
+                    try:
+                        os.link(claim, lock)
+                    except OSError:
+                        pass            # a newer lock exists: leave it
+                    try:
+                        os.unlink(claim)
+                    except FileNotFoundError:
+                        pass
+                    return False
+                try:
+                    os.unlink(claim)
+                except FileNotFoundError:
+                    pass
+                continue
+            os.write(fd, str(os.getpid()).encode())
+            os.close(fd)
+            return True
+        return False
+
+    def _unlock(self) -> None:
+        try:
+            os.unlink(self._lock_file())
+        except FileNotFoundError:
+            pass
+
     def gc(self) -> int:
         """Enforce the disk-tier bounds (full directory scan); -> number
         of files evicted.  Also sweeps *.tmp sidecars orphaned by a
-        killed writer."""
+        killed writer.  Cross-process safe: the sweep runs under an
+        O_EXCL lockfile and is skipped (returns 0) while another process
+        holds it, so two concurrent searches on one cache directory can
+        never double-evict."""
         self._puts_since_gc = 0
         if not self.path or (self.max_disk_entries is None
                              and self.max_disk_bytes is None):
             return 0
+        if not self._try_lock():
+            return 0
+        try:
+            return self._gc_locked()
+        finally:
+            self._unlock()
+
+    def _gc_locked(self) -> int:
         import time
         files = []
         total = 0
@@ -236,7 +325,9 @@ class ResultCache:
                     st = de.stat()
                 except FileNotFoundError:
                     continue            # concurrent eviction
-                if de.name.endswith(".tmp"):
+                if de.name.endswith(".tmp") or \
+                        de.name.startswith(GC_LOCK + ".stale."):
+                    # orphans of killed writers / lock-breakers
                     if st.st_mtime < stale:
                         try:
                             os.unlink(de.path)

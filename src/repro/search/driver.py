@@ -22,8 +22,10 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.evaluator import evaluate_network
-from ..core.explorer import ArchResult, WorkloadResult
+from ..core.explorer import (ArchResult, WorkloadResult,
+                             _workload_key as _wl_key)
 from ..core.mapper import MapperConfig, build_mapspace
+from ..core.mapspace_array import build_packed_mapspace
 from ..core.evaluator import evaluate_mapping
 from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..core.workload import TENSORS
@@ -50,9 +52,14 @@ class SearchReport:
     backend: str = "jnp"                 # resolved scoring engine
     n_evaluated: int = 0                 # distinct architectures evaluated
     n_revisits: int = 0                  # strategy re-proposals served free
-    n_enumerations: int = 0              # mapspaces actually built
+    n_enumerations: int = 0              # mapspaces scored (cache misses)
     n_cache_hits: int = 0                # workload results served from cache
     n_cache_misses: int = 0
+    # packed candidate-array builds (the packed pipeline derives arrays
+    # even for cache hits — its keys are content digests; a warm run
+    # re-builds (vectorized, ~10x cheaper than the legacy constructor)
+    # but still scores nothing)
+    n_packed_builds: int = 0
 
     def goal_value(self) -> float:
         return self.best.goal_value(self.goal)
@@ -78,6 +85,7 @@ class SearchReport:
             "n_enumerations": self.n_enumerations,
             "n_cache_hits": self.n_cache_hits,
             "n_cache_misses": self.n_cache_misses,
+            "n_packed_builds": self.n_packed_builds,
             "pareto_size": len(self.pareto),
             "pareto": self.pareto.summary(),
             "best_curve": self.best_curve(),
@@ -91,7 +99,8 @@ class _Evaluator:
     def __init__(self, space: ArchSpace, workloads: TaskWorkloads,
                  cfg: MapperConfig, goal: str, cache_level: str,
                  use_batch: bool, batching: str, cache: ResultCache,
-                 report: SearchReport, backend: str = "jnp"):
+                 report: SearchReport, backend: str = "jnp",
+                 use_packed: bool = True):
         self.space = space
         self.workloads = workloads
         self.cfg = cfg
@@ -102,6 +111,31 @@ class _Evaluator:
         self.cache = cache
         self.report = report
         self.backend = backend          # resolved engine ("jnp"/"pallas")
+        # the array-native pipeline drives the fused path; "per-arch"
+        # keeps the seed's object semantics (bit-exact explorer parity)
+        self.packed = use_packed and batching == "fused"
+        self.rows_scored = 0            # mapspace rows sent to a scorer
+        self.archs_scored = 0           # architectures those rows covered
+
+    def _mapspace_and_key(self, coords: Coords, hw, wl, memo: Dict):
+        """-> (packed_or_none, key).  The packed pipeline builds the
+        arrays first (cheap, vectorized) and keys the cache on their
+        content digest; the legacy pipeline keys on config alone."""
+        wk = (coords, _wl_key(wl))
+        if wk in memo:
+            return memo[wk]
+        if self.packed:
+            pm = build_packed_mapspace(wl, hw, self.cfg)
+            self.report.n_packed_builds += 1
+            k = cache_key(wl, hw, self.cfg, self.goal,
+                          scorer=self.batching, backend=self.backend,
+                          mapspace=pm.digest())
+        else:
+            pm = None
+            k = cache_key(wl, hw, self.cfg, self.goal,
+                          scorer=self.batching, backend=self.backend)
+        memo[wk] = (pm, k)
+        return pm, k
 
     def __call__(self, batch: Sequence[Coords]) -> Dict[Coords, ArchResult]:
         # pass 1: cache consult; collect mapspace jobs for the misses
@@ -109,12 +143,12 @@ class _Evaluator:
         keymaps: Dict[Coords, List[str]] = {}
         jobs: List[MapspaceJob] = []
         meta: Dict[Tuple[Coords, str], Tuple[int, int]] = {}
+        ms_memo: Dict[object, Tuple[object, str]] = {}
         for coords in batch:
             hw = self.space.at(coords)
             keys: List[str] = []
             for wl in self.workloads.intra:
-                k = cache_key(wl, hw, self.cfg, self.goal,
-                              scorer=self.batching, backend=self.backend)
+                pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo)
                 keys.append(k)
                 tag = (coords, k)
                 if tag in decoded or tag in meta:
@@ -125,14 +159,24 @@ class _Evaluator:
                     self.report.n_cache_hits += 1
                     continue
                 self.report.n_cache_misses += 1
-                space_ = build_mapspace(wl, hw, self.cfg)
                 self.report.n_enumerations += 1
-                if not space_.mappings:
-                    raise RuntimeError(
-                        f"empty valid mapspace for {wl.name} on {hw.name}")
-                jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
-                                        mappings=space_.mappings))
-                meta[tag] = (space_.total_candidates, space_.n_valid)
+                if pm is not None:
+                    if not len(pm):
+                        raise RuntimeError(
+                            f"empty valid mapspace for {wl.name} "
+                            f"on {hw.name}")
+                    jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
+                                            packed=pm))
+                    meta[tag] = (pm.total_candidates, pm.n_valid)
+                else:
+                    space_ = build_mapspace(wl, hw, self.cfg)
+                    if not space_.mappings:
+                        raise RuntimeError(
+                            f"empty valid mapspace for {wl.name} "
+                            f"on {hw.name}")
+                    jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
+                                            mappings=space_.mappings))
+                    meta[tag] = (space_.total_candidates, space_.n_valid)
             keymaps[coords] = keys
 
         # pass 2: score all pending mapspaces (fused across architectures,
@@ -143,8 +187,16 @@ class _Evaluator:
             else:
                 bests = per_arch_best(jobs, self.goal, self.use_batch,
                                       backend=self.backend)
+            self.rows_scored += sum(j.n_rows() for j in jobs)
+            # only architectures that actually contributed jobs — counting
+            # fully-cache-served archs would skew mean rows/arch low and
+            # inflate the auto round size
+            self.archs_scored += len({j.tag[0] for j in jobs})
             for job, b in zip(jobs, bests):
-                m = job.mappings[b.index]
+                # winner-only materialization: the packed pipeline never
+                # builds Mapping objects for the losers
+                m = (job.packed.materialize(b.index)
+                     if job.packed is not None else job.mappings[b.index])
                 est = evaluate_mapping(m)
                 total, n_valid = meta[job.tag]
                 r = WorkloadResult(workload=job.workload, mapping=m,
@@ -177,6 +229,24 @@ class _Evaluator:
         return out
 
 
+TARGET_FUSED_ROWS = 65536       # rows one auto-sized round aims to fuse
+AUTO_ROUND_MIN = 2
+AUTO_ROUND_MAX = 64
+
+
+def auto_round_size(mean_rows_per_arch: float) -> Optional[int]:
+    """`round_size="auto"`: fuse bigger rounds when mapspaces are small
+    (per-round overhead amortizes over more architectures) and smaller
+    rounds when they are large (bounds the fused batch so XLA's
+    power-of-2 bucketing doesn't thrash the compile cache).  Returns
+    None when there is no signal yet (all cache hits)."""
+    if mean_rows_per_arch <= 0:
+        return None
+    return max(AUTO_ROUND_MIN,
+               min(AUTO_ROUND_MAX,
+                   TARGET_FUSED_ROWS // max(1, int(mean_rows_per_arch))))
+
+
 def run_search(task: Union[TaskDescription, TaskWorkloads],
                arch_space,
                goal: str = "edp",
@@ -190,7 +260,8 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                cache: Union[ResultCache, str, None] = None,
                objectives: Sequence[str] = DEFAULT_OBJECTIVES,
                seed: int = 0,
-               round_size: int = 8,
+               round_size: Union[int, str] = 8,
+               use_packed: bool = True,
                strategy_params: Optional[Dict[str, Any]] = None,
                verbose: bool = False) -> SearchReport:
     """Multi-strategy, multi-objective design-space exploration.
@@ -211,11 +282,24 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  never alias.
     cache      : ResultCache, a directory path for a persistent cache, or
                  None for a fresh in-memory cache
+    round_size : architectures proposed per strategy round; "auto" scales
+                 each round to the observed mean mapspace size (small
+                 mapspaces -> bigger fused rounds, large -> smaller)
+    use_packed : drive the fused path with `PackedMapspace` arrays
+                 (vectorized construction/validation, winner-only
+                 materialization, content-digest cache keys); False keeps
+                 the legacy object pipeline (identical winners — asserted
+                 in tests and benchmarked in bench_mapspace_throughput)
     """
     from ..core.backend import resolve_backend
     if batching not in ("fused", "per-arch"):
         raise ValueError(f"batching must be 'fused' or 'per-arch', "
                          f"got {batching!r}")
+    auto_round = round_size == "auto"
+    if not auto_round and (not isinstance(round_size, int)
+                           or round_size < 1):
+        raise ValueError(f"round_size must be a positive int or 'auto', "
+                         f"got {round_size!r}")
     backend = resolve_backend(backend)
     space = as_space(arch_space)
     workloads = task if isinstance(task, TaskWorkloads) else analyze(task)
@@ -240,18 +324,19 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                           backend=backend)
     evaluate = _Evaluator(space, workloads, cfg, goal, cache_level,
                           use_batch, batching, cache, report,
-                          backend=backend)
+                          backend=backend, use_packed=use_packed)
 
     memo: Dict[Coords, ArchResult] = {}
     best: Optional[ArchResult] = None
     best_coords: Coords = ()
     best_val = float("inf")
 
+    cur_round = 8 if auto_round else round_size
     stall_rounds = 0
     while report.n_evaluated < budget and not strat.exhausted:
         if len(memo) >= space.size or stall_rounds >= 100:
             break                       # nothing fresh left to evaluate
-        want = min(round_size, budget - report.n_evaluated)
+        want = min(cur_round, budget - report.n_evaluated)
         proposals = strat.ask(want)
         if not proposals:
             break                       # strategy is awaiting nothing: stop
@@ -266,6 +351,11 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         stall_rounds = 0 if fresh else stall_rounds + 1
         if fresh:
             memo.update(evaluate(fresh))
+            if auto_round and evaluate.archs_scored:
+                sized = auto_round_size(evaluate.rows_scored
+                                        / evaluate.archs_scored)
+                if sized is not None:
+                    cur_round = sized
         feedback: List[Tuple[Coords, float]] = []
         fresh_set = set(fresh)
         for c in ordered:
