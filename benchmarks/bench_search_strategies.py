@@ -7,18 +7,36 @@ curve, so future PRs can track search-quality trajectories from the
 machine-readable JSON that benchmarks/run.py emits.  Also exercises the
 persistent result cache: strategies share one cache, and a warm exhaustive
 re-run must do zero mapspace enumerations.
+
+The constrained section runs the paper's budget-constrained
+design-selection workflow (§6 case studies): an area cap over a wider
+lattice, the (cycles, energy) frontier as the quality metric, and the
+evals-to-target-hypervolume claim — the surrogate-model `bandit` must
+reach >=95% of the exhaustive sweep's constrained hypervolume within
+1/5 of its evaluations, and do so in fewer evaluations than scalarized
+annealing needs for the same target.
 """
 from __future__ import annotations
 
 from repro.core import MapperConfig
 from repro.core.task_analyst import NETWORKS
-from repro.search import ArchSpace, ResultCache, run_search
+from repro.search import (ArchSpace, ResultCache, hypervolume,
+                          ref_from_values, run_search)
 
 from .common import Timer, claim
 
 LATTICE = dict(num_pes=(128, 256, 512), rf_words=(128, 256),
                gbuf_words=(32 * 1024, 64 * 1024, 128 * 1024))
-STRATEGIES = ("exhaustive", "random", "anneal", "evolve")
+STRATEGIES = ("exhaustive", "random", "anneal", "evolve", "bandit",
+              "hv-evolve")
+
+# wider lattice for the constrained workflow: the area cap (60th
+# percentile of lattice areas) statically rejects the fat fifth
+CONSTRAINED_LATTICE = dict(num_pes=(128, 256, 512, 1024),
+                           rf_words=(128, 256, 512),
+                           gbuf_words=(32 * 1024, 64 * 1024, 128 * 1024))
+CONSTRAINED_OBJECTIVES = ("cycles", "energy_pj")
+HV_TARGET = 0.95
 
 
 def run(max_mappings=800, budget=9, seed=0, backend="auto"):
@@ -105,7 +123,92 @@ def run(max_mappings=800, budget=9, seed=0, backend="auto"):
           all(r["n_enumerations"] == 0 for r in out["strategies"].values()),
           f"enumerations="
           f"{[r['n_enumerations'] for r in out['strategies'].values()]}")
+
+    out["constrained"] = _constrained_section(task, cfg, seed)
     return out
+
+
+def _first_hit(curve, target):
+    """1-based evaluation index where the curve reaches `target`."""
+    return next((i + 1 for i, h in enumerate(curve) if h >= target), None)
+
+
+def _constrained_section(task, cfg, seed):
+    """Area-capped frontier search: exhaustive ground truth, then the
+    evals-to-target-hypervolume race (bandit vs scalarized anneal)."""
+    space = ArchSpace.spatial(bits=32, zero_skip=True,
+                              **CONSTRAINED_LATTICE)
+    areas = sorted(space.at(c).total_area() for c in space.all_coords())
+    cap = areas[len(areas) * 3 // 5]
+    constraints = [f"area_mm2<={cap}"]
+    cache = ResultCache()       # constraint digest partitions keys anyway
+    res = {"space_size": space.size, "area_cap_mm2": cap,
+           "objectives": list(CONSTRAINED_OBJECTIVES)}
+
+    t = Timer()
+    full = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
+                      strategy="exhaustive", constraints=constraints,
+                      seed=seed, objectives=CONSTRAINED_OBJECTIVES)
+    # one shared reference point makes the runs' hypervolumes comparable
+    ref = ref_from_values([r["objectives"] for r in full.history
+                           if r.get("feasible") and r.get("objectives")])
+    hv_full = hypervolume(full.pareto.values(), ref)
+    res["exhaustive"] = {
+        "us": t.us(), "n_evaluated": full.n_evaluated,
+        "n_skipped_infeasible": full.n_skipped_infeasible,
+        "feasible_frac": full.feasible_frac, "hypervolume": hv_full,
+        "pareto": full.pareto.summary()}
+
+    budget = space.size // 5
+    runs = {}
+    for name, b in (("bandit", budget), ("anneal", space.size)):
+        t = Timer()
+        rep = run_search(task, space, goal="edp", cfg=cfg, cache=cache,
+                         strategy=name, budget=b, constraints=constraints,
+                         seed=seed, objectives=CONSTRAINED_OBJECTIVES)
+        curve = rep.hypervolume_curve(ref=ref)
+        runs[name] = rep
+        res[name] = {
+            "us": t.us(), "budget": b, "n_evaluated": rep.n_evaluated,
+            "n_skipped_infeasible": rep.n_skipped_infeasible,
+            "hv_frac": curve[-1] / hv_full,
+            "hv_curve": curve,
+            "evals_to_target": _first_hit(curve, HV_TARGET * hv_full)}
+
+    def all_feasible(rep):
+        return (rep.best.network.area_mm2 <= cap and
+                all(p.payload.network.area_mm2 <= cap
+                    for p in rep.pareto.points()))
+
+    claim(res, "constrained searches return only feasible designs "
+          "(area cap holds on best + whole frontier)",
+          all(all_feasible(r) for r in [full, *runs.values()]),
+          f"cap={cap:.1f}mm^2; frontier sizes="
+          f"{[len(r.pareto) for r in [full, *runs.values()]]}")
+    claim(res, "bandit hypervolume curve is non-decreasing",
+          all(a <= b_ + 1e-12 for a, b_ in
+              zip(res["bandit"]["hv_curve"], res["bandit"]["hv_curve"][1:])),
+          f"curve={['%.3f' % v for v in res['bandit']['hv_curve']]}")
+    hit_b = res["bandit"]["evals_to_target"]
+    # denominator = exhaustive's architecture *budget* (the driver's
+    # evaluation unit: every distinct proposal, including the cap's
+    # free static rejections); the detail discloses the scored split so
+    # the ratio is never read as scored-vs-scored
+    claim(res, "bandit reaches >=95% of exhaustive's constrained "
+          "hypervolume in <=1/5 of its architecture budget",
+          hit_b is not None and hit_b <= full.n_evaluated / 5,
+          f"bandit {res['bandit']['hv_frac']:.3f} of exhaustive HV, "
+          f"target hit at eval {hit_b}/"
+          f"{res['bandit']['n_evaluated']} (exhaustive: "
+          f"{full.n_evaluated} proposals = "
+          f"{full.n_evaluated - full.n_skipped_infeasible} scored + "
+          f"{full.n_skipped_infeasible} statically rejected)")
+    hit_a = res["anneal"]["evals_to_target"]
+    claim(res, "bandit needs fewer evaluations than scalarized anneal "
+          "to the same 95% hypervolume target",
+          hit_b is not None and (hit_a is None or hit_b < hit_a),
+          f"bandit@{hit_b} vs anneal@{hit_a}")
+    return res
 
 
 def rows(res):
@@ -122,4 +225,14 @@ def rows(res):
                   f"best={s['best_edp']:.3e};"
                   f"gap={res['gap_vs_optimum'][name]:.3f}x;"
                   f"evals={s['n_evaluated']}"))
+    c = res["constrained"]
+    r.append(("search_constrained_exhaustive", c["exhaustive"]["us"],
+              f"hv={c['exhaustive']['hypervolume']:.4f};"
+              f"feasible={c['exhaustive']['feasible_frac']:.2f};"
+              f"skips={c['exhaustive']['n_skipped_infeasible']}"))
+    for name in ("bandit", "anneal"):
+        r.append((f"search_constrained_{name}", c[name]["us"],
+                  f"hv_frac={c[name]['hv_frac']:.3f};"
+                  f"hit95@{c[name]['evals_to_target']};"
+                  f"evals={c[name]['n_evaluated']}"))
     return r

@@ -16,7 +16,16 @@ Gbuf lattice instead — e.g. simulated annealing at a small budget:
         --strategy anneal --budget 8 --compare-exhaustive
 
 which demonstrates >10x fewer architecture evaluations than exhaustive
-for a near-optimal (target <=5% worse EDP) design.
+for a near-optimal (target <=5% worse EDP) design.  Hardware budgets turn
+the run into the paper's constrained design-selection workflow — e.g. the
+surrogate-model bandit under an area cap:
+
+    PYTHONPATH=src python examples/dse_modern_lm.py \\
+        --strategy bandit --budget 12 --max-area 400 --max-power 30
+
+Designs violating the area cap are rejected before any mapspace scoring;
+the report prints the feasible fraction and the (normalized) frontier
+hypervolume alongside the Pareto set.
 """
 import argparse
 import sys
@@ -48,8 +57,16 @@ def lm_task_workloads(top_k=3):
 
 
 def run_search_dse(strategy: str, budget: int, compare: bool,
-                   seed: int = 0, backend: str = "auto"):
+                   seed: int = 0, backend: str = "auto",
+                   max_area: float = None, max_power: float = None):
     from repro.search import ArchSpace, ResultCache, run_search
+
+    constraints = []
+    if max_area is not None:
+        constraints.append(f"area_mm2<={max_area}")
+    if max_power is not None:
+        constraints.append(f"power_w<={max_power}")
+    constraints = constraints or None
 
     cfg, tw = lm_task_workloads()
     space = ArchSpace.spatial(bits=16, zero_skip=False, **SEARCH_LATTICE)
@@ -57,17 +74,26 @@ def run_search_dse(strategy: str, budget: int, compare: bool,
     cache = ResultCache()
     print(f"{cfg.name}: searching a {space.size}-point lattice "
           f"({'x'.join(str(len(v)) for v in space.axis_values)}) with "
-          f"strategy={strategy}, budget={budget}, backend={backend}\n")
+          f"strategy={strategy}, budget={budget}, backend={backend}"
+          + (f", constraints={' & '.join(constraints)}" if constraints
+             else "") + "\n")
 
     rep = run_search(tw, space, goal="edp", cfg=mcfg, strategy=strategy,
                      budget=budget, cache=cache, seed=seed, verbose=True,
-                     backend=backend)
+                     backend=backend, constraints=constraints)
     n = rep.best.network
     print(f"\n{strategy} best: {rep.best.hardware.name}  "
           f"edp={n.edp:.3e} (cycles={n.cycles:.3e}, "
           f"energy={n.energy_pj:.3e}pJ) after {rep.n_evaluated} evals "
           f"({rep.n_enumerations} mapspace enumerations, "
           f"{rep.n_cache_hits} cache hits)")
+    if constraints:
+        print(f"feasible: {rep.n_feasible}/{rep.n_evaluated} evaluations "
+              f"({rep.feasible_frac:.0%}); {rep.n_skipped_infeasible} "
+              f"rejected by static checks before any scoring")
+    hv = rep.hypervolume_curve()
+    print(f"frontier hypervolume: {hv[-1]:.4f} (normalized; "
+          f"{len(rep.pareto)} points)")
     print("Pareto frontier (cycles, energy, area):")
     for p in rep.pareto.summary():
         print(f"  {p['key']:>16s} cycles={p['cycles']:.3e} "
@@ -77,7 +103,8 @@ def run_search_dse(strategy: str, budget: int, compare: bool,
         print(f"\nexhaustive reference over all {space.size} points "
               f"(shares the result cache)...")
         full = run_search(tw, space, goal="edp", cfg=mcfg,
-                          strategy="exhaustive", cache=cache, seed=seed)
+                          strategy="exhaustive", cache=cache, seed=seed,
+                          constraints=constraints)
         gap = rep.goal_value() / full.goal_value() - 1.0
         ratio = full.n_evaluated / max(rep.n_evaluated, 1)
         print(f"exhaustive best: {full.best.hardware.name}  "
@@ -120,13 +147,21 @@ def main():
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
+    from repro.search import STRATEGIES
     ap.add_argument("--strategy", default=None,
-                    choices=("exhaustive", "random", "anneal", "evolve"),
+                    choices=tuple(sorted(STRATEGIES)),
                     help="run the repro.search engine on a widened lattice")
     ap.add_argument("--budget", type=int, default=8,
                     help="architecture-evaluation budget (with --strategy)")
     ap.add_argument("--compare-exhaustive", action="store_true",
                     help="also sweep the full lattice and report the gap")
+    ap.add_argument("--max-area", type=float, default=None,
+                    help="area budget in mm^2 (constraint area_mm2<=CAP; "
+                         "statically infeasible designs are rejected "
+                         "before any mapspace scoring)")
+    ap.add_argument("--max-power", type=float, default=None,
+                    help="average-power budget in watts "
+                         "(constraint power_w<=CAP)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
@@ -136,6 +171,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.strategy:
         run_search_dse(args.strategy, args.budget, args.compare_exhaustive,
-                       args.seed, args.backend)
+                       args.seed, args.backend,
+                       max_area=args.max_area, max_power=args.max_power)
     else:
         main()

@@ -66,12 +66,33 @@ def _workload_key(wl: Workload):
             round(wl.input_zero_frac, 9), round(wl.weight_zero_frac, 9))
 
 
+def _best_of_extras(extra_candidates, workload, cfg, score, best_m,
+                    best_e, best_v):
+    """Race caller-supplied candidate mappings against the mapspace
+    winner (same goal, same evaluator); the better mapping wins.
+    Candidates go through the mapper's §5 resource validator first —
+    `evaluate_mapping` scores invalid mappings optimistically, so an
+    unchecked warm-start could otherwise win with an infeasible tile."""
+    from .mapper import validate
+    for cand in (extra_candidates(workload) if extra_candidates else ()):
+        if not validate(cand, cfg.act_reserve):
+            continue
+        e = evaluate_mapping(cand)
+        v = score(e)
+        if v < best_v:
+            best_m, best_e, best_v = cand, e, v
+    return best_m, best_e, best_v
+
+
 def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
                          cfg: Optional[MapperConfig] = None,
                          goal: str = "edp",
                          use_batch: bool = True,
                          backend: str = "jnp",
-                         use_packed: bool = False) -> WorkloadResult:
+                         use_packed: bool = False,
+                         extra_candidates: Optional[
+                             Callable[[Workload], Sequence[Mapping]]]
+                         = None) -> WorkloadResult:
     """Search one workload's mapspace for the goal-optimal mapping.
 
     `backend` selects the batch scoring engine (`core.backend`): the seed
@@ -82,8 +103,14 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
     (`core.mapspace_array`): vectorized construction/validation, batch
     scoring over the packed arrays, and winner-only `Mapping`
     materialization.  The default keeps the seed object path (bit-exact,
-    including the scalar-loop selection for tiny mapspaces)."""
+    including the scalar-loop selection for tiny mapspaces).
+
+    `extra_candidates(workload)` may supply additional `Mapping`s (e.g.
+    a warm-start carried over from a related search) that are evaluated
+    against the mapspace winner; the best of all candidates is
+    returned."""
     cfg = cfg or MapperConfig()
+    score = GOALS[goal]
     if use_packed:
         from .batch_eval import batch_best_index
         from .mapspace_array import build_packed_mapspace
@@ -94,6 +121,9 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
         idx = batch_best_index(pm, goal, backend=backend)
         best_m = pm.materialize(idx)
         best_e = evaluate_mapping(best_m)
+        best_m, best_e, _ = _best_of_extras(extra_candidates, workload,
+                                            cfg, score, best_m, best_e,
+                                            score(best_e))
         return WorkloadResult(workload=workload, mapping=best_m,
                               estimate=best_e,
                               mapspace_size=pm.total_candidates,
@@ -102,7 +132,6 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
     if not space.mappings:
         raise RuntimeError(
             f"empty valid mapspace for {workload.name} on {hw.name}")
-    score = GOALS[goal]
     best_m, best_e, best_v = None, None, math.inf
     if use_batch and len(space.mappings) >= 64:
         try:
@@ -122,6 +151,9 @@ def find_optimal_mapping(workload: Workload, hw: HardwareDesc,
             v = score(e)
             if v < best_v:
                 best_m, best_e, best_v = m, e, v
+    best_m, best_e, best_v = _best_of_extras(extra_candidates, workload,
+                                             cfg, score, best_m, best_e,
+                                             best_v)
     return WorkloadResult(workload=workload, mapping=best_m, estimate=best_e,
                           mapspace_size=space.total_candidates,
                           n_valid=space.n_valid)
@@ -133,7 +165,10 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
                           cache_level: str = "Gbuf",
                           use_batch: bool = True,
                           backend: str = "jnp",
-                          use_packed: bool = False) -> ArchResult:
+                          use_packed: bool = False,
+                          extra_candidates: Optional[
+                              Callable[[Workload], Sequence[Mapping]]]
+                          = None) -> ArchResult:
     """Algorithm 1 lines 6-15 for one hardware description."""
     cfg = cfg or MapperConfig()
     cache: Dict[tuple, WorkloadResult] = {}
@@ -141,9 +176,9 @@ def evaluate_architecture(task_workloads: TaskWorkloads, hw: HardwareDesc,
     for wl in task_workloads.intra:
         key = _workload_key(wl)
         if key not in cache:
-            cache[key] = find_optimal_mapping(wl, hw, cfg, goal, use_batch,
-                                              backend=backend,
-                                              use_packed=use_packed)
+            cache[key] = find_optimal_mapping(
+                wl, hw, cfg, goal, use_batch, backend=backend,
+                use_packed=use_packed, extra_candidates=extra_candidates)
         r = cache[key]
         results.append(dataclasses.replace(r, workload=wl))
     max_buf = 0.0

@@ -4,7 +4,11 @@ Layers on top of repro.core's Algorithm-1 machinery:
 
   space          ArchSpace lattice over architecture parameters
   strategies     Strategy registry: exhaustive | random | anneal | evolve
-  pareto         ParetoFront over (cycles, energy, area[, edp])
+                 | bandit | hv-evolve
+  pareto         ParetoFront over (cycles, energy, area[, edp]),
+                 hypervolume + reference-point normalization
+  constraints    declarative hardware budgets (area/power/energy/cycles),
+                 feasibility masks, penalty policy
   cache          persistent content-addressed mapspace-result cache
   batch_frontier cross-architecture fused mapspace evaluation
   driver         run_search orchestration -> SearchReport
@@ -14,12 +18,17 @@ Layers on top of repro.core's Algorithm-1 machinery:
 """
 from .batch_frontier import JobBest, MapspaceJob, fused_best, per_arch_best
 from .cache import ResultCache, cache_key, decode_result, encode_result
-from .driver import SearchReport, auto_round_size, run_search
+from .constraints import METRICS, Constraint, ConstraintSet
+from .driver import (SearchReport, SkippedArch, auto_round_size,
+                     run_search)
 from .pareto import (DEFAULT_OBJECTIVES, OBJECTIVES, ParetoFront,
-                     ParetoPoint, dominates, objective_values, scalarize)
+                     ParetoPoint, dominates, hypervolume, non_dominated,
+                     normalize_values, objective_values, ref_from_values,
+                     scalarize)
 from .space import ArchSpace, as_space
-from .strategies import (STRATEGIES, AnnealStrategy, EvolveStrategy,
-                         ExhaustiveStrategy, RandomStrategy, Strategy,
+from .strategies import (STRATEGIES, AnnealStrategy, BanditStrategy,
+                         EvolveStrategy, ExhaustiveStrategy,
+                         HvEvolveStrategy, RandomStrategy, Strategy,
                          make_strategy, register)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

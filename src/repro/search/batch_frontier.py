@@ -15,6 +15,12 @@ Jobs carry either a `core.mapspace_array.PackedMapspace` (the primary,
 array-native representation — zero packing happens here) or a legacy
 `Mapping` list (packed exactly once, then treated identically); group
 evaluation *concatenates* the per-job arrays instead of re-packing.
+
+Constrained searches never enqueue jobs for statically infeasible
+architectures (the driver's `_Evaluator` rejects them on the hardware
+description alone, before `MapspaceJob` construction), so every job that
+reaches `fused_best`/`per_arch_best` — and therefore every kernel or
+fused jnp call — is for a design still in the running.
 """
 from __future__ import annotations
 

@@ -33,7 +33,8 @@ from ..core.mapper import MapperConfig
 from ..core.mapping import Mapping
 from ..core.workload import Workload
 
-CACHE_FORMAT = 3        # v3: packed-mapspace digest joined the key scheme
+CACHE_FORMAT = 4        # v4: constraints digest joined the key scheme
+#                         (v3: packed-mapspace digest)
 GC_LOCK = ".gc.lock"    # cross-process guard for the disk-tier GC
 GC_LOCK_STALE_S = 600.0  # a lock older than this is a dead process's
 
@@ -68,7 +69,8 @@ def _cfg_sig(cfg: MapperConfig) -> Dict[str, Any]:
 def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
               goal: str, scorer: str = "per-arch",
               backend: str = "jnp",
-              mapspace: Optional[str] = None) -> str:
+              mapspace: Optional[str] = None,
+              constraints: Optional[str] = None) -> str:
     """`scorer` is the selection path ("per-arch" seed semantics vs
     "fused" cross-arch batching) and `backend` the scoring engine ("jnp"
     oracle vs "pallas" mapspace kernel — pass the *resolved* engine, not
@@ -82,10 +84,18 @@ def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
     (`PackedMapspace.digest()`): the array-native pipeline keys entries
     on the mapspace that was actually scored instead of trusting the
     mapper config to describe it, so any change to the candidate
-    generator invalidates stale winners automatically."""
+    generator invalidates stale winners automatically.
+
+    `constraints` is the `ConstraintSet.digest()` of the search's budget
+    set (None = unconstrained).  Per-workload winners don't depend on
+    network-level budgets today, but the digest still partitions the
+    namespace so constrained and unconstrained runs (or runs under
+    different budgets) can never alias — future constraint-aware mapping
+    selection gets correctness for free."""
     payload = {"v": CACHE_FORMAT, "workload": _workload_sig(wl),
                "hw": _hw_sig(hw), "cfg": _cfg_sig(cfg), "goal": goal,
-               "scorer": scorer, "backend": backend}
+               "scorer": scorer, "backend": backend,
+               "constraints": constraints}
     if mapspace is not None:
         payload["mapspace"] = mapspace
     blob = json.dumps(payload, sort_keys=True, default=str)

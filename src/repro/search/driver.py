@@ -19,6 +19,7 @@ batching="per-arch", which reproduces the seed explorer result exactly.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.evaluator import evaluate_network
@@ -31,9 +32,24 @@ from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..core.workload import TENSORS
 from .batch_frontier import MapspaceJob, fused_best, per_arch_best
 from .cache import ResultCache, cache_key, decode_result, encode_result
-from .pareto import DEFAULT_OBJECTIVES, ParetoFront
+from .constraints import ConstraintSet
+from .pareto import (DEFAULT_OBJECTIVES, ParetoFront, hypervolume,
+                     objective_values, ref_from_values)
 from .space import ArchSpace, Coords, as_space
 from .strategies import Strategy, make_strategy
+
+
+@dataclasses.dataclass
+class SkippedArch:
+    """An architecture rejected by a *static* constraint check (e.g. an
+    area cap — `hw.total_area()` needs no mapping search), so its
+    mapspaces were never built or scored.  Stands in for an ArchResult
+    in the driver's memo; never joins `all_archs` or the frontier."""
+    hardware: Any                        # HardwareDesc
+    violation: float                     # total static relative violation
+
+    def goal_value(self, goal: str) -> float:
+        return float("inf")
 
 
 @dataclasses.dataclass
@@ -50,6 +66,7 @@ class SearchReport:
     pareto: ParetoFront
     history: List[Dict[str, Any]]        # one row per *fresh* evaluation
     backend: str = "jnp"                 # resolved scoring engine
+    constraints: Optional[ConstraintSet] = None
     n_evaluated: int = 0                 # distinct architectures evaluated
     n_revisits: int = 0                  # strategy re-proposals served free
     n_enumerations: int = 0              # mapspaces scored (cache misses)
@@ -60,23 +77,59 @@ class SearchReport:
     # re-builds (vectorized, ~10x cheaper than the legacy constructor)
     # but still scores nothing)
     n_packed_builds: int = 0
+    n_feasible: int = 0                  # evaluations satisfying constraints
+    n_skipped_infeasible: int = 0        # rejected before any scoring
 
     def goal_value(self) -> float:
         return self.best.goal_value(self.goal)
 
+    @property
+    def feasible_frac(self) -> float:
+        """Fraction of spent evaluations that were feasible designs."""
+        return self.n_feasible / max(self.n_evaluated, 1)
+
     def best_curve(self) -> List[float]:
-        """Best-so-far goal value after each fresh evaluation."""
+        """Best-so-far goal value after each fresh evaluation.  Only
+        feasible rows advance the curve (their value is the raw goal;
+        infeasible rows carry penalized values and are excluded from
+        `best`, so the curve always ends at `goal_value()`); steps
+        before the first feasible evaluation read +inf."""
         out: List[float] = []
         cur = float("inf")
         for row in self.history:
-            cur = min(cur, row["value"])
+            if row.get("feasible", True):
+                cur = min(cur, row["value"])
             out.append(cur)
+        return out
+
+    def hypervolume_curve(self, ref: Optional[Sequence[float]] = None) \
+            -> List[float]:
+        """Frontier hypervolume after each fresh evaluation (feasible
+        points only — infeasible steps hold the curve flat).  With the
+        default ref (worst feasible value seen across the whole run,
+        `pareto.ref_from_values`) the curve is non-decreasing by
+        construction; pass one explicit `ref` to compare runs."""
+        if ref is None:
+            vals = [row["objectives"] for row in self.history
+                    if row.get("feasible", True) and row.get("objectives")]
+            if not vals:
+                return [0.0] * len(self.history)
+            ref = ref_from_values(vals)
+        front = ParetoFront(self.objectives)
+        out: List[float] = []
+        for row in self.history:
+            if row.get("feasible", True) and row.get("objectives"):
+                front.add(row["arch"], row["objectives"])
+            out.append(hypervolume(front.values(), ref) if len(front)
+                       else 0.0)
         return out
 
     def summary(self) -> Dict[str, Any]:
         return {
             "goal": self.goal, "strategy": self.strategy,
             "backend": self.backend,
+            "constraints": str(self.constraints) if self.constraints
+            else None,
             "budget": self.budget, "space_size": self.space_size,
             "best_arch": self.best.hardware.name,
             "best_value": self.goal_value(),
@@ -86,9 +139,16 @@ class SearchReport:
             "n_cache_hits": self.n_cache_hits,
             "n_cache_misses": self.n_cache_misses,
             "n_packed_builds": self.n_packed_builds,
+            "n_feasible": self.n_feasible,
+            "n_skipped_infeasible": self.n_skipped_infeasible,
+            "feasible_frac": self.feasible_frac,
             "pareto_size": len(self.pareto),
             "pareto": self.pareto.summary(),
-            "best_curve": self.best_curve(),
+            # steps before the first feasible evaluation are +inf in
+            # best_curve(); emit None so the dict stays strict-JSON-safe
+            "best_curve": [v if math.isfinite(v) else None
+                           for v in self.best_curve()],
+            "hypervolume_curve": self.hypervolume_curve(),
         }
 
 
@@ -100,7 +160,8 @@ class _Evaluator:
                  cfg: MapperConfig, goal: str, cache_level: str,
                  use_batch: bool, batching: str, cache: ResultCache,
                  report: SearchReport, backend: str = "jnp",
-                 use_packed: bool = True):
+                 use_packed: bool = True,
+                 constraints: Optional[ConstraintSet] = None):
         self.space = space
         self.workloads = workloads
         self.cfg = cfg
@@ -111,6 +172,8 @@ class _Evaluator:
         self.cache = cache
         self.report = report
         self.backend = backend          # resolved engine ("jnp"/"pallas")
+        self.constraints = constraints
+        self._cdigest = constraints.digest() if constraints else None
         # the array-native pipeline drives the fused path; "per-arch"
         # keeps the seed's object semantics (bit-exact explorer parity)
         self.packed = use_packed and batching == "fused"
@@ -129,23 +192,35 @@ class _Evaluator:
             self.report.n_packed_builds += 1
             k = cache_key(wl, hw, self.cfg, self.goal,
                           scorer=self.batching, backend=self.backend,
-                          mapspace=pm.digest())
+                          mapspace=pm.digest(),
+                          constraints=self._cdigest)
         else:
             pm = None
             k = cache_key(wl, hw, self.cfg, self.goal,
-                          scorer=self.batching, backend=self.backend)
+                          scorer=self.batching, backend=self.backend,
+                          constraints=self._cdigest)
         memo[wk] = (pm, k)
         return pm, k
 
-    def __call__(self, batch: Sequence[Coords]) -> Dict[Coords, ArchResult]:
+    def __call__(self, batch: Sequence[Coords]) \
+            -> Dict[Coords, Union[ArchResult, SkippedArch]]:
         # pass 1: cache consult; collect mapspace jobs for the misses
         decoded: Dict[Tuple[Coords, str], WorkloadResult] = {}
         keymaps: Dict[Coords, List[str]] = {}
         jobs: List[MapspaceJob] = []
         meta: Dict[Tuple[Coords, str], Tuple[int, int]] = {}
         ms_memo: Dict[object, Tuple[object, str]] = {}
+        skipped: Dict[Coords, SkippedArch] = {}
         for coords in batch:
             hw = self.space.at(coords)
+            if self.constraints is not None \
+                    and self.constraints.statically_infeasible(hw):
+                # the hardware description alone already violates a
+                # budget: no mapspace is built, packed, or kernel-scored
+                skipped[coords] = SkippedArch(
+                    hardware=hw,
+                    violation=self.constraints.static_violation(hw))
+                continue
             keys: List[str] = []
             for wl in self.workloads.intra:
                 pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo)
@@ -208,7 +283,10 @@ class _Evaluator:
         # pass 3: network-level assembly per architecture (Algorithm 1
         # lines 12-14; mirrors core.explorer.evaluate_architecture)
         out: Dict[Coords, ArchResult] = {}
+        out.update(skipped)
         for coords in batch:
+            if coords in skipped:
+                continue
             hw = self.space.at(coords)
             results = [
                 dataclasses.replace(decoded[(coords, k)], workload=wl)
@@ -259,6 +337,7 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                backend: str = "auto",
                cache: Union[ResultCache, str, None] = None,
                objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+               constraints=None,
                seed: int = 0,
                round_size: Union[int, str] = 8,
                use_packed: bool = True,
@@ -282,6 +361,14 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  never alias.
     cache      : ResultCache, a directory path for a persistent cache, or
                  None for a fresh in-memory cache
+    constraints: hardware budgets (`search.constraints`): a ConstraintSet,
+                 a Constraint, a "metric<=bound" string, or a list of
+                 either.  Only feasible designs join the frontier and the
+                 best ranking; strategies receive penalized feedback for
+                 infeasible ones; designs violating a *static* constraint
+                 (area cap) are rejected before any mapspace is built or
+                 scored.  The constraint digest joins the cache key, so
+                 constrained and unconstrained entries never alias.
     round_size : architectures proposed per strategy round; "auto" scales
                  each round to the observed mean mapspace size (small
                  mapspaces -> bigger fused rounds, large -> smaller)
@@ -301,6 +388,7 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         raise ValueError(f"round_size must be a positive int or 'auto', "
                          f"got {round_size!r}")
     backend = resolve_backend(backend)
+    cset = ConstraintSet.from_any(constraints)
     space = as_space(arch_space)
     workloads = task if isinstance(task, TaskWorkloads) else analyze(task)
     cfg = cfg or MapperConfig()
@@ -321,12 +409,21 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                           space_size=space.size, best=None,   # type: ignore
                           best_coords=(), all_archs=[],
                           pareto=ParetoFront(objectives), history=[],
-                          backend=backend)
+                          backend=backend, constraints=cset)
     evaluate = _Evaluator(space, workloads, cfg, goal, cache_level,
                           use_batch, batching, cache, report,
-                          backend=backend, use_packed=use_packed)
+                          backend=backend, use_packed=use_packed,
+                          constraints=cset)
 
-    memo: Dict[Coords, ArchResult] = {}
+    # duck-typed: pre-registry Strategy objects may predate the hooks
+    _observe = getattr(strat, "observe", lambda c, o, f=True: None)
+    if cset is not None:
+        # strategies that understand budgets repair their own proposals
+        # against the static constraints (never wasting budget on e.g.
+        # over-area designs); the evaluator still rejects any that slip
+        getattr(strat, "set_constraints", lambda c: None)(cset)
+
+    memo: Dict[Coords, Union[ArchResult, SkippedArch]] = {}
     best: Optional[ArchResult] = None
     best_coords: Coords = ()
     best_val = float("inf")
@@ -360,28 +457,67 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         fresh_set = set(fresh)
         for c in ordered:
             res = memo[c]
-            val = res.goal_value(goal)
+            if isinstance(res, SkippedArch):
+                # statically rejected: the strategy still learns (ordered
+                # by violation), but nothing joins frontier/all_archs
+                val = cset.skip_value(res.violation)
+                feedback.append((c, val))
+                if c in fresh_set:
+                    report.n_evaluated += 1
+                    report.n_skipped_infeasible += 1
+                    report.history.append({
+                        "step": report.n_evaluated, "coords": c,
+                        "arch": res.hardware.name, "value": val,
+                        "objectives": None, "feasible": False,
+                        "skipped": True})
+                    _observe(c, None, False)
+                    if verbose:
+                        print(f"  {res.hardware.name:28s} statically "
+                              f"infeasible (violation "
+                              f"{res.violation:.3f})")
+                else:
+                    report.n_revisits += 1
+                continue
+            raw = res.goal_value(goal)
+            obj_vals = objective_values(res.network, report.objectives)
+            if cset is None:
+                feasible, val = True, raw
+            else:
+                violation = cset.violation(res.network, res.hardware)
+                feasible = violation <= 0.0
+                val = raw if feasible else cset.penalized(raw, violation)
             feedback.append((c, val))
             if c in fresh_set:
                 report.n_evaluated += 1
                 report.all_archs.append(res)
-                report.pareto.add_network(res.hardware.name, res.network,
-                                          payload=res)
+                if feasible:
+                    report.n_feasible += 1
+                    report.pareto.add_network(res.hardware.name,
+                                              res.network, payload=res)
+                    if best is None or raw < best_val:
+                        best, best_coords, best_val = res, c, raw
                 report.history.append({
                     "step": report.n_evaluated, "coords": c,
-                    "arch": res.hardware.name, "value": val})
-                if best is None or val < best_val:
-                    best, best_coords, best_val = res, c, val
+                    "arch": res.hardware.name, "value": val,
+                    "objectives": obj_vals, "feasible": feasible})
+                _observe(c, obj_vals, feasible)
                 if verbose:
                     n = res.network
                     print(f"  {res.hardware.name:28s} "
                           f"cycles={n.cycles:.3e} "
-                          f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}")
+                          f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}"
+                          + ("" if feasible else "  [infeasible]"))
             else:
                 report.n_revisits += 1
         strat.tell(feedback)
 
     if best is None:
+        if cset is not None:
+            raise RuntimeError(
+                f"no feasible architecture under {cset} "
+                f"({report.n_evaluated} evaluated, "
+                f"{report.n_skipped_infeasible} statically rejected); "
+                f"relax the constraints or widen the space")
         raise RuntimeError("search evaluated no architectures "
                            "(empty space or zero budget)")
     report.best = best

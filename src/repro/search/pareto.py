@@ -47,6 +47,85 @@ def scalarize(values: Sequence[float],
     return sum(wi * (v / max(ri, 1e-30)) for wi, v, ri in zip(w, values, r))
 
 
+# ---------------------------------------------------------------------------
+# hypervolume (all objectives minimized)
+# ---------------------------------------------------------------------------
+def ref_from_values(values: Sequence[Sequence[float]],
+                    margin: float = 1.01) -> Tuple[float, ...]:
+    """Reference point for hypervolume: the componentwise worst (max) over
+    `values`, pushed out by `margin` so every point dominates it strictly.
+    Fixing one ref across runs makes their hypervolumes comparable."""
+    if not values:
+        raise ValueError("need at least one value tuple for a ref point")
+    ndim = len(values[0])
+    return tuple(max(v[d] for v in values) * margin + 1e-30
+                 for d in range(ndim))
+
+
+def normalize_values(values: Sequence[Sequence[float]],
+                     ref: Sequence[float]) -> List[Tuple[float, ...]]:
+    """Divide each coordinate by the reference point's — the normalized
+    ref is all-ones, so hypervolumes are scale-free and land in [0, 1]."""
+    return [tuple(v / max(r, 1e-30) for v, r in zip(vals, ref))
+            for vals in values]
+
+
+def non_dominated(values: Sequence[Sequence[float]]) \
+        -> List[Tuple[float, ...]]:
+    """Non-dominated subset of `values` (duplicates kept once, first
+    wins) — the pruning rule `ParetoFront.add` and `hypervolume` share."""
+    front: List[Tuple[float, ...]] = []
+    for v in values:
+        v = tuple(v)
+        if any(dominates(f, v) or f == v for f in front):
+            continue
+        front = [f for f in front if not dominates(v, f)]
+        front.append(v)
+    return front
+
+
+def _hv(pts: List[Tuple[float, ...]], ref: Sequence[float]) -> float:
+    """Exact hypervolume by recursive objective slicing (HSO).  `pts`
+    must already be componentwise < ref.  Fronts here are small (tens of
+    points), so the simple recursion is plenty."""
+    if not pts:
+        return 0.0
+    if len(ref) == 1:
+        return ref[0] - min(p[0] for p in pts)
+    # slab the last objective: between consecutive z levels, the covered
+    # (d-1)-volume is that of the points already "active" (last <= z)
+    zs = sorted({p[-1] for p in pts})
+    zs.append(ref[-1])
+    vol = 0.0
+    for lo, hi in zip(zs, zs[1:]):
+        active = [p[:-1] for p in pts if p[-1] <= lo]
+        if active:
+            vol += (hi - lo) * _hv(active, ref[:-1])
+    return vol
+
+
+def hypervolume(values: Sequence[Sequence[float]],
+                ref: Sequence[float],
+                normalize: bool = True) -> float:
+    """Dominated hypervolume of `values` w.r.t. reference point `ref`
+    (all objectives minimized; bigger is better).  Points not strictly
+    inside the ref box contribute nothing; dominated points are pruned
+    first, so HV(raw set) == HV(its Pareto front) by construction.
+
+    normalize=True computes in ref-normalized space (each coordinate
+    divided by the ref's), making the result scale-invariant and <= 1.
+    """
+    vals = [tuple(float(x) for x in v) for v in values]
+    if any(len(v) != len(ref) for v in vals):
+        raise ValueError("objective/ref dimensionality mismatch")
+    if normalize:
+        vals = normalize_values(vals, ref)
+        ref = (1.0,) * len(ref)
+    inside = [v for v in vals
+              if all(math.isfinite(x) and x < r for x, r in zip(v, ref))]
+    return _hv(non_dominated(inside), tuple(ref))
+
+
 @dataclasses.dataclass
 class ParetoPoint:
     key: Any                       # caller identity (arch name / coords)
@@ -70,6 +149,9 @@ class ParetoFront:
         self._points: List[ParetoPoint] = []
         self.n_offered = 0
         self.n_evicted = 0
+        #: componentwise worst value ever *offered* (accepted or not) —
+        #: a stable default hypervolume reference for this front's run
+        self.nadir: Optional[Tuple[float, ...]] = None
 
     def __len__(self) -> int:
         return len(self._points)
@@ -89,6 +171,9 @@ class ParetoFront:
         if any(math.isnan(v) for v in vals):
             return False
         self.n_offered += 1
+        if all(math.isfinite(v) for v in vals):
+            self.nadir = vals if self.nadir is None else tuple(
+                max(a, b) for a, b in zip(self.nadir, vals))
         for p in self._points:
             if dominates(p.values, vals) or p.values == vals:
                 return False
@@ -112,6 +197,22 @@ class ParetoFront:
             return None
         i = self.objectives.index(objective)
         return min(self._points, key=lambda p: p.values[i])
+
+    def ref_point(self, margin: float = 1.01) -> Tuple[float, ...]:
+        """Default hypervolume reference: the worst value ever offered,
+        pushed out by `margin`.  For cross-run comparisons pass one
+        explicit ref to both computations instead."""
+        if self.nadir is None:
+            raise ValueError("empty front: no finite points offered yet")
+        return ref_from_values([self.nadir], margin)
+
+    def hypervolume(self, ref: Optional[Sequence[float]] = None,
+                    normalize: bool = True) -> float:
+        """Dominated hypervolume of the frontier (bigger is better)."""
+        if not self._points:
+            return 0.0
+        return hypervolume(self.values(), ref or self.ref_point(),
+                           normalize=normalize)
 
     def summary(self) -> List[Dict[str, Any]]:
         """JSON-friendly view (for SearchReport / benchmark emission)."""

@@ -1,0 +1,196 @@
+"""Constraint-aware search: feasibility semantics, static short-circuit,
+hypervolume reporting, and the cache-aliasing / warm-replay regressions.
+"""
+import math
+
+import pytest
+
+from repro.core import (Conv2D, FC, MapperConfig, Pool2D, TaskDescription,
+                        analyze, generate_arch_space, make_spatial_arch)
+from repro.search import (Constraint, ConstraintSet, ResultCache,
+                          cache_key, decode_result, encode_result,
+                          run_search)
+from repro.search.cache import CACHE_FORMAT
+
+TASK = TaskDescription(
+    name="tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+CFG = MapperConfig(max_mappings=200, seed=0)
+
+
+def arch_list():
+    return list(generate_arch_space(num_pes=(16, 64), rf_words=(64,),
+                                    gbuf_words=(2048, 8192), bits=16))
+
+
+def mid_area_cap():
+    """A cap that keeps 3 of the 4 test architectures feasible."""
+    areas = sorted(hw.total_area() for hw in arch_list())
+    return (areas[2] + areas[3]) / 2
+
+
+# ---------------------------------------------------------------------------
+# Constraint / ConstraintSet semantics
+# ---------------------------------------------------------------------------
+def test_constraint_parse_and_violation():
+    c = Constraint.parse("area_mm2 <= 12.5")
+    assert (c.metric, c.bound, c.sense) == ("area_mm2", 12.5, "<=")
+    assert c.satisfied(12.5) and not c.satisfied(12.6)
+    assert c.violation(12.5) == 0.0
+    assert c.violation(25.0) == pytest.approx(1.0)
+    g = Constraint.ge("cycles", 100.0)
+    assert g.satisfied(100.0) and not g.satisfied(99.0)
+    assert g.violation(50.0) == pytest.approx(0.5)
+    with pytest.raises(KeyError):
+        Constraint.le("not-a-metric", 1.0)
+    with pytest.raises(ValueError):
+        Constraint.parse("area_mm2 == 3")
+    with pytest.raises(ValueError):
+        Constraint.le("area_mm2", -1.0)
+
+
+def test_constraint_set_policies_and_digest():
+    cs = ConstraintSet(["area_mm2<=10", Constraint.le("power_w", 5)])
+    assert len(cs) == 2
+    assert cs.penalized(100.0, 0.0) == 100.0
+    assert cs.penalized(100.0, 0.5) == pytest.approx(100.0 * 6.0)
+    assert math.isinf(ConstraintSet(["area_mm2<=10"],
+                                    policy="death").penalized(100.0, 0.5))
+    # digest separates bound / policy / weight changes
+    digests = {ConstraintSet(["area_mm2<=10"]).digest(),
+               ConstraintSet(["area_mm2<=11"]).digest(),
+               ConstraintSet(["area_mm2<=10"], policy="death").digest(),
+               ConstraintSet(["area_mm2<=10"],
+                             penalty_weight=2.0).digest()}
+    assert len(digests) == 4
+    # but is canonical over construction spelling
+    assert ConstraintSet([Constraint.le("area_mm2", 10)]).digest() == \
+        ConstraintSet(["area_mm2<=10"]).digest()
+    with pytest.raises(ValueError):
+        ConstraintSet([])
+    assert ConstraintSet.from_any(None) is None
+    assert len(ConstraintSet.from_any("area_mm2<=10")) == 1
+
+
+def test_static_metrics_against_network_metrics():
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                           bits=16)
+    c = Constraint.le("area_mm2", hw.total_area() * 0.5)
+    assert c.static_value(hw) == pytest.approx(hw.total_area())
+    assert ConstraintSet([c]).statically_infeasible(hw)
+    assert not Constraint.le("power_w", 1.0).static_value(hw)
+
+
+# ---------------------------------------------------------------------------
+# run_search plumbing
+# ---------------------------------------------------------------------------
+def test_run_search_constrained_returns_only_feasible():
+    cap = mid_area_cap()
+    rep = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     constraints=[f"area_mm2<={cap}"])
+    assert rep.n_skipped_infeasible == 1          # the area cap is static
+    assert rep.n_evaluated == len(arch_list())
+    assert rep.n_feasible == len(arch_list()) - 1
+    assert 0 < rep.feasible_frac < 1
+    assert rep.best.network.area_mm2 <= cap
+    area_i = rep.pareto.objectives.index("area_mm2")
+    for p in rep.pareto.points():
+        assert p.values[area_i] <= cap
+    # skipped archs never reach all_archs (they were never evaluated)
+    assert len(rep.all_archs) == rep.n_feasible
+    for row in rep.history:
+        assert row["feasible"] == (not row.get("skipped", False))
+    # hypervolume curve: one entry per evaluation, non-decreasing
+    hv = rep.hypervolume_curve()
+    assert len(hv) == rep.n_evaluated
+    assert all(a <= b + 1e-12 for a, b in zip(hv, hv[1:]))
+    assert hv[-1] > 0
+
+
+def test_run_search_static_skip_avoids_all_scoring():
+    """A cap excluding every architecture raises, after zero mapspace
+    builds/enumerations (the static check runs before any scoring)."""
+    tiny_cap = min(hw.total_area() for hw in arch_list()) * 0.5
+    cache = ResultCache()
+    with pytest.raises(RuntimeError, match="no feasible architecture"):
+        run_search(TASK, arch_list(), goal="edp", cfg=CFG, cache=cache,
+                   constraints=[f"area_mm2<={tiny_cap}"])
+    assert cache.stats.puts == 0
+
+
+def test_run_search_unconstrained_unchanged():
+    base = run_search(TASK, arch_list(), goal="edp", cfg=CFG)
+    assert base.constraints is None
+    assert base.n_skipped_infeasible == 0
+    assert base.feasible_frac == 1.0
+    con = run_search(TASK, arch_list(), goal="edp", cfg=CFG,
+                     constraints=["area_mm2<=1e9"])   # never binds
+    assert con.best.hardware.name == base.best.hardware.name
+    assert con.goal_value() == base.goal_value()
+
+
+# ---------------------------------------------------------------------------
+# cache regressions
+# ---------------------------------------------------------------------------
+def test_constrained_and_unconstrained_entries_never_alias():
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                           bits=16)
+    wl = analyze(TASK).intra[0]
+    d1 = ConstraintSet(["area_mm2<=10"]).digest()
+    d2 = ConstraintSet(["area_mm2<=20"]).digest()
+    k_un = cache_key(wl, hw, CFG, "edp")
+    k_c1 = cache_key(wl, hw, CFG, "edp", constraints=d1)
+    k_c2 = cache_key(wl, hw, CFG, "edp", constraints=d2)
+    assert len({k_un, k_c1, k_c2}) == 3
+    # same budget set -> same partition (shared entries)
+    assert k_c1 == cache_key(wl, hw, CFG, "edp",
+                             constraints=ConstraintSet(
+                                 ["area_mm2<=10"]).digest())
+
+
+def test_cache_format_bump_roundtrip(tmp_path):
+    """v4 entries round-trip; pre-bump (v3) disk entries are dead."""
+    assert CACHE_FORMAT == 4
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                           bits=16)
+    wl = analyze(TASK).intra[0]
+    from repro.core.explorer import find_optimal_mapping
+    r = find_optimal_mapping(wl, hw, CFG, "edp")
+    entry = encode_result(r)
+    assert entry["v"] == CACHE_FORMAT
+    back = decode_result(entry, wl, hw)
+    assert back.mapping.factors == r.mapping.factors
+    assert back.estimate.cycles == r.estimate.cycles
+
+    cache = ResultCache(path=str(tmp_path / "c"))
+    cache.put("k", entry)
+    fresh = ResultCache(path=str(tmp_path / "c"))
+    assert fresh.get("k") is not None
+    stale = dict(entry, v=CACHE_FORMAT - 1)
+    cache.put("stale", stale)
+    assert ResultCache(path=str(tmp_path / "c")).get("stale") is None
+
+
+def test_warm_cache_bandit_replay_bit_identical(tmp_path):
+    """A warm-cache bandit run must replay the cold run bit-for-bit:
+    same proposals (seeded), same decoded results, so identical
+    frontier, best, and history — with zero mapspace enumerations."""
+    cap = mid_area_cap()
+    d = str(tmp_path / "dse-cache")
+    kw = dict(goal="edp", cfg=CFG, strategy="bandit", budget=3, seed=4,
+              constraints=[f"area_mm2<={cap}"])
+    cold = run_search(TASK, arch_list(), cache=ResultCache(path=d), **kw)
+    assert cold.n_enumerations > 0
+    warm = run_search(TASK, arch_list(), cache=ResultCache(path=d), **kw)
+    assert warm.n_enumerations == 0
+    assert warm.best.hardware.name == cold.best.hardware.name
+    assert warm.goal_value() == cold.goal_value()
+    assert warm.pareto.values() == cold.pareto.values()
+    assert [r["coords"] for r in warm.history] == \
+        [r["coords"] for r in cold.history]
+    assert [r["value"] for r in warm.history] == \
+        [r["value"] for r in cold.history]
+    assert warm.hypervolume_curve() == cold.hypervolume_curve()

@@ -18,7 +18,7 @@ from repro.core.batch_eval import (batch_best_index, batch_scores,
 from repro.core.backend import score_mapspace, best_index
 from repro.search import (MapspaceJob, ResultCache, cache_key, fused_best,
                           per_arch_best, run_search)
-from repro.search.cache import GC_LOCK
+from repro.search.cache import CACHE_FORMAT, GC_LOCK
 from repro.search.driver import auto_round_size
 from repro.search.space import ArchSpace
 
@@ -319,7 +319,7 @@ def test_cache_key_mapspace_digest_component():
 # ---------------------------------------------------------------------------
 def _fill(cache, n):
     for i in range(n):
-        cache.put(f"k{i:04d}", {"v": 3, "i": i})
+        cache.put(f"k{i:04d}", {"v": CACHE_FORMAT, "i": i})
         os.utime(os.path.join(cache.path, f"k{i:04d}.json"),
                  (i + 1, i + 1))
 
@@ -358,7 +358,7 @@ def test_two_result_caches_one_directory(tmp_path):
     c2 = ResultCache(path=str(tmp_path), max_disk_entries=8,
                      max_disk_bytes=None, gc_every=10_000)
     for i in range(20):                  # interleaved writers
-        (c1 if i % 2 == 0 else c2).put(f"k{i:04d}", {"v": 3, "i": i})
+        (c1 if i % 2 == 0 else c2).put(f"k{i:04d}", {"v": CACHE_FORMAT, "i": i})
     e1 = c1.gc()
     e2 = c2.gc()
     assert e1 + e2 >= 12                 # bound enforced exactly once each

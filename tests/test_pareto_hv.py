@@ -1,0 +1,209 @@
+"""Property tests for ParetoFront + hypervolume.
+
+Four invariants, each stated once and checked two ways — a seeded-random
+trial loop that always runs, and a hypothesis property when hypothesis
+is installed (same predicate, adversarial inputs):
+
+  1. insertion monotonicity — adding points never decreases the
+     hypervolume under a fixed reference point;
+  2. dominance pruning — HV of a raw point set equals HV of its Pareto
+     front (dominated points contribute nothing);
+  3. scale invariance — ref-normalized HV is unchanged when any one
+     objective axis (points *and* ref) is rescaled;
+  4. constraint masking — for budgets that are caps on minimized
+     objectives, filter-then-front == front-then-filter (an infeasible
+     dominator would have to be feasible, so eviction never loses a
+     feasible frontier point).
+"""
+import math
+import random
+
+import pytest
+
+from repro.search import (Constraint, ConstraintSet, ParetoFront,
+                          dominates, hypervolume, normalize_values,
+                          ref_from_values)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+OBJS = ("cycles", "energy_pj", "area_mm2")
+
+
+def rand_points(rng: random.Random, n: int, ndim: int = 3):
+    return [tuple(rng.uniform(1.0, 100.0) for _ in range(ndim))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the four predicates (shared by the random loops and hypothesis)
+# ---------------------------------------------------------------------------
+def check_insertion_monotone(pts):
+    ref = ref_from_values(pts, margin=1.1)
+    front = ParetoFront(OBJS[: len(pts[0])])
+    prev = 0.0
+    for i, p in enumerate(pts):
+        front.add(i, p)
+        hv = front.hypervolume(ref)
+        assert hv >= prev - 1e-12, f"HV decreased: {prev} -> {hv}"
+        prev = hv
+
+
+def check_pruning_invariant(pts):
+    ref = ref_from_values(pts, margin=1.1)
+    front = ParetoFront(OBJS[: len(pts[0])])
+    for i, p in enumerate(pts):
+        front.add(i, p)
+    raw = hypervolume(pts, ref)
+    pruned = hypervolume(front.values(), ref)
+    assert raw == pytest.approx(pruned, rel=1e-9, abs=1e-15)
+
+
+def check_scale_invariance(pts, axis: int, scale: float):
+    ref = ref_from_values(pts, margin=1.1)
+    hv = hypervolume(pts, ref)
+
+    def stretch(v):
+        return tuple(x * scale if d == axis else x
+                     for d, x in enumerate(v))
+    hv2 = hypervolume([stretch(p) for p in pts], stretch(ref))
+    assert hv == pytest.approx(hv2, rel=1e-9, abs=1e-15)
+
+
+def check_mask_equivalence(pts, cap_axis: int, cap: float):
+    cset = ConstraintSet([Constraint.le(OBJS[cap_axis], cap)])
+    mask = cset.objective_mask(OBJS[: len(pts[0])], pts)
+
+    filtered = [p for p, ok in zip(pts, mask) if ok]
+    a = ParetoFront(OBJS[: len(pts[0])])
+    for i, p in enumerate(filtered):
+        a.add(i, p)
+
+    b = ParetoFront(OBJS[: len(pts[0])])
+    for i, p in enumerate(pts):
+        b.add(i, p)
+    front_vals = b.values()
+    front_mask = cset.objective_mask(OBJS[: len(pts[0])], front_vals)
+    survivors = [v for v, ok in zip(front_vals, front_mask) if ok]
+
+    assert sorted(a.values()) == sorted(survivors)
+
+
+# ---------------------------------------------------------------------------
+# always-run seeded trials
+# ---------------------------------------------------------------------------
+def test_insertion_monotonicity_random_trials():
+    rng = random.Random(11)
+    for trial in range(15):
+        check_insertion_monotone(rand_points(rng, rng.randrange(1, 40),
+                                             rng.choice((2, 3))))
+
+
+def test_dominance_pruning_random_trials():
+    rng = random.Random(13)
+    for trial in range(15):
+        pts = rand_points(rng, rng.randrange(1, 40), rng.choice((2, 3)))
+        # salt in exact duplicates and dominated copies
+        pts += [pts[0], tuple(x * 1.5 for x in pts[0])]
+        check_pruning_invariant(pts)
+
+
+def test_scale_invariance_random_trials():
+    rng = random.Random(17)
+    for trial in range(15):
+        ndim = rng.choice((2, 3))
+        check_scale_invariance(rand_points(rng, rng.randrange(1, 30), ndim),
+                               axis=rng.randrange(ndim),
+                               scale=10 ** rng.uniform(-6, 6))
+
+
+def test_constraint_mask_equivalence_random_trials():
+    rng = random.Random(19)
+    for trial in range(25):
+        ndim = rng.choice((2, 3))
+        pts = rand_points(rng, rng.randrange(1, 40), ndim)
+        check_mask_equivalence(pts, cap_axis=rng.randrange(ndim),
+                               cap=rng.uniform(0.5, 120.0))
+
+
+# ---------------------------------------------------------------------------
+# hand-checked exact values anchor the implementation
+# ---------------------------------------------------------------------------
+def test_hypervolume_known_values():
+    assert hypervolume([(1, 1)], (2, 2), normalize=False) == 1.0
+    # two boxes of area 2 overlapping in a unit square
+    assert hypervolume([(0, 1), (1, 0)], (2, 2), normalize=False) == 3.0
+    # 3-D: unit cube corner + a dominated point contributing nothing
+    assert hypervolume([(1, 1, 1), (1.5, 1.5, 1.5)], (2, 2, 2),
+                       normalize=False) == 1.0
+    # points on/outside the ref contribute nothing
+    assert hypervolume([(2, 2), (3, 1)], (2, 2), normalize=False) == 0.0
+    assert hypervolume([], (2, 2)) == 0.0
+    # normalized: box [0.5, 1]^2 -> 0.25
+    assert hypervolume([(10, 50)], (20, 100)) == pytest.approx(0.25)
+
+
+def test_normalize_and_ref_helpers():
+    pts = [(10.0, 200.0), (20.0, 100.0)]
+    ref = ref_from_values(pts, margin=1.0)
+    assert ref == pytest.approx((20.0, 200.0), rel=1e-12)
+    norm = normalize_values(pts, ref)
+    for v in norm:
+        assert all(0 < x <= 1.0 + 1e-12 for x in v)
+    front = ParetoFront(("cycles", "energy_pj"))
+    for i, p in enumerate(pts):
+        front.add(i, p)
+    assert front.nadir == pytest.approx((20.0, 200.0))
+    assert front.hypervolume() > 0.0
+
+
+def test_front_hypervolume_counts_only_frontier():
+    front = ParetoFront(("cycles", "energy_pj"))
+    front.add("a", (1, 1))
+    front.add("b", (10, 10))             # dominated -> rejected
+    ref = (20, 20)
+    assert front.hypervolume(ref, normalize=False) == \
+        hypervolume([(1, 1)], ref, normalize=False)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (skipped when hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    coords = st.floats(min_value=0.5, max_value=1000.0,
+                       allow_nan=False, allow_infinity=False)
+
+    def _pts(ndim):
+        return st.lists(st.tuples(*([coords] * ndim)), min_size=1,
+                        max_size=25)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pts=st.one_of(_pts(2), _pts(3)))
+    def test_insertion_monotonicity_property(pts):
+        check_insertion_monotone(pts)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pts=st.one_of(_pts(2), _pts(3)))
+    def test_dominance_pruning_property(pts):
+        check_pruning_invariant(pts)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pts=_pts(3), axis=st.integers(0, 2),
+           scale=st.floats(min_value=1e-6, max_value=1e6,
+                           allow_nan=False, allow_infinity=False))
+    def test_scale_invariance_property(pts, axis, scale):
+        check_scale_invariance(pts, axis, scale)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pts=_pts(3), axis=st.integers(0, 2),
+           cap=st.floats(min_value=0.5, max_value=1500.0,
+                         allow_nan=False, allow_infinity=False))
+    def test_constraint_mask_equivalence_property(pts, axis, cap):
+        check_mask_equivalence(pts, axis, cap)
+else:                                    # pragma: no cover
+    def test_hypothesis_not_installed_placeholder():
+        pytest.skip("hypothesis not installed; seeded trials above cover "
+                    "the same predicates")
