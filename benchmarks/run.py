@@ -29,6 +29,7 @@ MODULES = [
     ("bench_backend_dispatch", {"max_mappings": 2000}),
     ("bench_search_strategies", {"max_mappings": 800}),
     ("bench_trim_planner", {}),
+    ("bench_obs", {"max_mappings": 1500}),
 ]
 
 FAST_OVERRIDES = {"max_mappings": 600}
@@ -39,7 +40,16 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json-out", default="experiments/benchmarks.json")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export a Chrome trace (chrome://tracing / "
+                         "Perfetto) of the whole harness run")
     args = ap.parse_args()
+
+    # Ambient tracer: every module's pipeline phases (pack/validate/score/
+    # cache) record here, so each BENCH row carries its phase-time
+    # breakdown; --trace additionally exports the full span tree.
+    from repro.obs import Tracer, activate
+    tracer = Tracer()
 
     all_rows = []
     all_claims = []
@@ -53,8 +63,10 @@ def main() -> None:
             kw = {k: (FAST_OVERRIDES.get(k, v)) for k, v in kw.items()}
         mod = importlib.import_module(f"benchmarks.{name}")
         print(f"== {name} ==", flush=True)
+        phases_before = tracer.phase_times()
         try:
-            res = mod.run(**kw)
+            with activate(tracer), tracer.span(f"bench.{name}"):
+                res = mod.run(**kw)
         except Exception:
             traceback.print_exc()
             failed = True
@@ -65,12 +77,19 @@ def main() -> None:
         jax.clear_caches()          # bound the XLA code-cache footprint
         mod_rows = mod.rows(res)
         all_rows += mod_rows
+        phases_after = tracer.phase_times()
+        phase_delta = {
+            k: round(v - phases_before.get(k, 0.0), 3)
+            for k, v in phases_after.items()
+            if v - phases_before.get(k, 0.0) > 0.0005}
         bench_summary[name] = {
             # budget mode matters for cross-PR diffs: a --fast run must
             # never silently overwrite full-budget numbers unnoticed
             "mode": "fast" if args.fast else "full",
             "rows": {r: round(us, 2) for r, us, _ in mod_rows},
             "claims": res.get("claims", []),
+            # seconds spent per pipeline phase while this module ran
+            "phase_times": phase_delta,
         }
 
     print("\nname,us_per_call,derived")
@@ -83,6 +102,12 @@ def main() -> None:
         if not c["ok"]:
             print(f"  FAILED: {c['claim']} — {c['detail']}")
             failed = True
+
+    if args.trace:
+        os.makedirs(os.path.dirname(os.path.abspath(args.trace)),
+                    exist_ok=True)
+        tracer.export_chrome(args.trace)
+        print(f"trace: {args.trace} ({len(tracer.buffer)} spans)")
 
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out), exist_ok=True)

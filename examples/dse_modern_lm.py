@@ -58,7 +58,8 @@ def lm_task_workloads(top_k=3):
 
 def run_search_dse(strategy: str, budget: int, compare: bool,
                    seed: int = 0, backend: str = "auto",
-                   max_area: float = None, max_power: float = None):
+                   max_area: float = None, max_power: float = None,
+                   trace: str = None):
     from repro.search import ArchSpace, ResultCache, run_search
 
     constraints = []
@@ -80,7 +81,15 @@ def run_search_dse(strategy: str, budget: int, compare: bool,
 
     rep = run_search(tw, space, goal="edp", cfg=mcfg, strategy=strategy,
                      budget=budget, cache=cache, seed=seed, verbose=True,
-                     backend=backend, constraints=constraints)
+                     backend=backend, constraints=constraints,
+                     trace=bool(trace))
+    if trace:
+        rep.tracer.export_chrome(trace)
+        total = sum(rep.phase_times.values()) or 1.0
+        print(f"\ntrace -> {trace} (open in chrome://tracing or "
+              f"ui.perfetto.dev); phase split:")
+        for k, v in sorted(rep.phase_times.items(), key=lambda kv: -kv[1]):
+            print(f"  {k:16s} {v:8.3f}s  {v / total:6.1%}")
     n = rep.best.network
     print(f"\n{strategy} best: {rep.best.hardware.name}  "
           f"edp={n.edp:.3e} (cycles={n.cycles:.3e}, "
@@ -163,6 +172,10 @@ if __name__ == "__main__":
                     help="average-power budget in watts "
                          "(constraint power_w<=CAP)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="with --strategy: export a Chrome trace of the "
+                         "search (chrome://tracing / Perfetto) and print "
+                         "the phase-time split")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
                     help="mapspace scoring engine (pallas routes no-bypass "
@@ -172,6 +185,7 @@ if __name__ == "__main__":
     if args.strategy:
         run_search_dse(args.strategy, args.budget, args.compare_exhaustive,
                        args.seed, args.backend,
-                       max_area=args.max_area, max_power=args.max_power)
+                       max_area=args.max_area, max_power=args.max_power,
+                       trace=args.trace)
     else:
         main()

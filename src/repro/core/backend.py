@@ -172,27 +172,43 @@ def score_mapspace(mappings, goal: str = "edp",
     if goal not in GOAL_KEY:
         raise ValueError(f"goal must be one of {sorted(GOAL_KEY)}, "
                          f"got {goal!r}")
+    from ..obs import current_tracer
     engine = resolve_backend(backend)
+    tr = current_tracer()
     st, factors, rank, store = _as_arrays(mappings)
+    # dispatch spans are host-side; the np.asarray conversions inside
+    # them force JAX's async dispatch, so device time lands in the span
     if engine == "jnp":
-        scores, valid = batch_scores_arrays(st, factors, rank, store, goal)
-        return np.asarray(scores, np.float64), np.asarray(valid, bool)
+        with tr.span("backend.jnp", rows=int(factors.shape[0])):
+            scores, valid = batch_scores_arrays(st, factors, rank, store,
+                                                goal)
+            scores = np.asarray(scores, np.float64)
+            valid = np.asarray(valid, bool)
+        tr.metrics.counter("backend.rows.jnp").inc(factors.shape[0])
+        return scores, valid
 
     mask = eligibility_mask(mappings)
     n = factors.shape[0]
+    n_kernel = int(mask.sum())
     scores = np.empty((n,), np.float64)
     valid = np.empty((n,), bool)
-    if mask.any():
-        idx = np.flatnonzero(mask)
-        scores[idx] = _pallas_scores_arrays(st, factors[idx], rank[idx],
-                                            goal, block, interpret)
-        valid[idx] = validity_mask_arrays(st, factors[idx], store[idx])
-    if not mask.all():
-        idx = np.flatnonzero(~mask)
-        s, v = batch_scores_arrays(st, factors[idx], rank[idx], store[idx],
-                                   goal)
-        scores[idx] = np.asarray(s, np.float64)
-        valid[idx] = np.asarray(v, bool)
+    with tr.span("backend.pallas", rows=n, kernel_rows=n_kernel,
+                 jnp_rows=n - n_kernel):
+        if mask.any():
+            idx = np.flatnonzero(mask)
+            scores[idx] = _pallas_scores_arrays(st, factors[idx],
+                                                rank[idx], goal, block,
+                                                interpret)
+            valid[idx] = validity_mask_arrays(st, factors[idx],
+                                              store[idx])
+        if not mask.all():
+            idx = np.flatnonzero(~mask)
+            s, v = batch_scores_arrays(st, factors[idx], rank[idx],
+                                       store[idx], goal)
+            scores[idx] = np.asarray(s, np.float64)
+            valid[idx] = np.asarray(v, bool)
+    tr.metrics.counter("backend.rows.kernel").inc(n_kernel)
+    tr.metrics.counter("backend.rows.jnp").inc(n - n_kernel)
     return scores, valid
 
 

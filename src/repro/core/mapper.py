@@ -419,19 +419,30 @@ def build_mapspace(workload: Workload, hw: HardwareDesc,
     This is the exact-parity legacy object path: candidates come from the
     same index-row generator as `core.mapspace_array.build_packed_mapspace`
     (the primary array-native representation) but are materialized into
-    `Mapping` objects and validated/pruned with the scalar formulas."""
-    cfg = cfg or MapperConfig()
-    tables, fi, oi, bi = candidate_index_rows(workload, hw, cfg)
-    total = tables.total
-    candidates: List[Mapping] = [
-        materialize_row(tables, workload, hw, fi[b], oi[b], bi[b])
-        for b in range(fi.shape[0])]
+    `Mapping` objects and validated/pruned with the scalar formulas.
 
-    valid = [m for m in candidates if validate(m, cfg.act_reserve)]
-    n_valid = len(valid)
-    pruned = prune(valid, cfg)
-    # If pruning removed everything (paper keeps constraints optional), fall
-    # back to the valid space so the explorer still finds a mapping.
-    mappings = pruned if pruned else valid
+    Emits the same `pack`/`validate` phase spans as the packed builder
+    into the ambient `repro.obs` tracer (no-op by default)."""
+    from ..obs import current_tracer
+    cfg = cfg or MapperConfig()
+    tr = current_tracer()
+    with tr.span("pack", phase=True, workload=workload.name,
+                 arch=hw.name) as sp:
+        tables, fi, oi, bi = candidate_index_rows(workload, hw, cfg)
+        total = tables.total
+        candidates: List[Mapping] = [
+            materialize_row(tables, workload, hw, fi[b], oi[b], bi[b])
+            for b in range(fi.shape[0])]
+        sp.set(candidates=len(candidates), total=total)
+
+    with tr.span("validate", phase=True, workload=workload.name) as sp:
+        valid = [m for m in candidates if validate(m, cfg.act_reserve)]
+        n_valid = len(valid)
+        pruned = prune(valid, cfg)
+        # If pruning removed everything (paper keeps constraints
+        # optional), fall back to the valid space so the explorer still
+        # finds a mapping.
+        mappings = pruned if pruned else valid
+        sp.set(n_valid=n_valid, survivors=len(mappings))
     return Mapspace(workload=workload, hardware=hw, mappings=mappings,
                     total_candidates=total, n_valid=n_valid)

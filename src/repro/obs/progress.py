@@ -1,0 +1,122 @@
+"""Progress events: a typed stream of "what the search just did".
+
+`run_search` emits `ProgressEvent`s — an architecture evaluated or
+statically skipped, a cache lookup resolved, the Pareto frontier growing,
+a strategy round finishing — into a `ProgressStream` with pluggable
+sinks.  This is the seed of the DSE-as-a-service client-streaming
+channel: a service wraps a queue-backed sink and forwards incremental
+frontier updates to clients as rounds complete.
+
+`verbose=True` is now just the `ConsoleSink` subscribed to this stream;
+it renders per-architecture lines byte-identical to the old ad-hoc
+`print()` branches, so existing users see exactly the same output from
+one code path.
+
+With no sinks subscribed, `emit()` returns before building the event —
+the off path costs one attribute check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+# event kinds emitted by the driver
+EVENT_KINDS = (
+    "arch-evaluated",       # one fresh architecture scored
+    "arch-skipped",         # rejected by a static constraint check
+    "cache-lookup",         # one per-workload cache consult (hit/tier)
+    "frontier-grew",        # the Pareto frontier accepted a point
+    "round-finished",       # one strategy round completed
+    "search-finished",      # run_search returning
+)
+
+
+@dataclasses.dataclass
+class ProgressEvent:
+    kind: str
+    t_wall: float
+    payload: Dict[str, Any]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "t_wall": self.t_wall, **self.payload}
+
+
+Sink = Callable[[ProgressEvent], None]
+
+
+class ProgressStream:
+    """Fan-out of ProgressEvents to subscribed sinks (callables)."""
+
+    def __init__(self, sinks: Optional[List[Sink]] = None):
+        self.sinks: List[Sink] = list(sinks or [])
+
+    @property
+    def active(self) -> bool:
+        return bool(self.sinks)
+
+    def subscribe(self, sink: Sink) -> Sink:
+        self.sinks.append(sink)
+        return sink
+
+    def emit(self, kind: str, **payload) -> None:
+        if not self.sinks:
+            return
+        ev = ProgressEvent(kind=kind, t_wall=time.time(), payload=payload)
+        for sink in self.sinks:
+            sink(ev)
+
+
+class ConsoleSink:
+    """Renders per-architecture events in the historical `verbose=True`
+    format (identical strings — asserted in tests); other event kinds are
+    silent by default so verbose output is unchanged."""
+
+    def __init__(self, stream=None, all_events: bool = False):
+        self.stream = stream or sys.stdout
+        self.all_events = all_events
+
+    def __call__(self, ev: ProgressEvent) -> None:
+        p = ev.payload
+        if ev.kind == "arch-evaluated":
+            print(f"  {p['arch']:28s} "
+                  f"cycles={p['cycles']:.3e} "
+                  f"energy={p['energy_pj']:.3e}pJ edp={p['edp']:.3e}"
+                  + ("" if p.get("feasible", True) else "  [infeasible]"),
+                  file=self.stream)
+        elif ev.kind == "arch-skipped":
+            print(f"  {p['arch']:28s} statically "
+                  f"infeasible (violation "
+                  f"{p['violation']:.3f})", file=self.stream)
+        elif self.all_events:
+            print(f"  [{ev.kind}] " + " ".join(
+                f"{k}={v}" for k, v in p.items()), file=self.stream)
+
+
+class CollectSink:
+    """Test/service helper: retains every event (optionally filtered)."""
+
+    def __init__(self, kinds: Optional[tuple] = None):
+        self.kinds = kinds
+        self.events: List[ProgressEvent] = []
+
+    def __call__(self, ev: ProgressEvent) -> None:
+        if self.kinds is None or ev.kind in self.kinds:
+            self.events.append(ev)
+
+    def of(self, kind: str) -> List[ProgressEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+
+def as_stream(progress) -> ProgressStream:
+    """Normalize a user-facing `progress=` argument: None -> inert
+    stream, a ProgressStream -> itself, a callable (or list of
+    callables) -> stream subscribed to them."""
+    if progress is None:
+        return ProgressStream()
+    if isinstance(progress, ProgressStream):
+        return progress
+    if callable(progress):
+        return ProgressStream([progress])
+    return ProgressStream(list(progress))

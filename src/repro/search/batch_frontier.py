@@ -139,13 +139,24 @@ def fused_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
         else:
             groups.setdefault(sig_of(a.st), []).append(i)
 
+    from ..obs import current_tracer
+    tr = current_tracer()
     for sig, idxs in kernel_groups.items():
         for chunk in _chunk(idxs, sizes, max_group):
-            _kernel_group(chunk, jobs, arrays, goal, out)
+            rows = sum(sizes[i] for i in chunk)
+            with tr.span("fused.kernel-group", jobs=len(chunk),
+                         rows=rows):
+                _kernel_group(chunk, jobs, arrays, goal, out)
+            tr.metrics.histogram("fused.group_rows").observe(rows)
+            tr.metrics.histogram("fused.group_jobs").observe(len(chunk))
 
     for sig, idxs in groups.items():
         for chunk in _chunk(idxs, sizes, max_group):
-            _eval_group(sig, chunk, jobs, arrays, key, out)
+            rows = sum(sizes[i] for i in chunk)
+            with tr.span("fused.jnp-group", jobs=len(chunk), rows=rows):
+                _eval_group(sig, chunk, jobs, arrays, key, out)
+            tr.metrics.histogram("fused.group_rows").observe(rows)
+            tr.metrics.histogram("fused.group_jobs").observe(len(chunk))
     return [b for b in out if b is not None]
 
 
@@ -236,30 +247,33 @@ def per_arch_best(jobs: Sequence[MapspaceJob], goal: str = "edp",
     from ..core.evaluator import evaluate_mapping
     from ..core.explorer import GOALS
 
+    from ..obs import current_tracer
+    tr = current_tracer()
     score = GOALS[goal]
     out: List[JobBest] = []
     for job in jobs:
-        batch = job.packed if job.packed is not None else job.mappings
-        mat = (job.packed.materialize if job.packed is not None
-               else job.mappings.__getitem__)
-        best_i = None
-        if use_batch and job.n_rows() >= 64:
-            try:
-                best_i = batch_best_index(batch, goal, backend=backend)
-                best_v = score(evaluate_mapping(mat(best_i)))
-            except Exception:
-                if backend != "jnp":
-                    raise           # an explicit engine must fail loudly —
-                    # a silent jnp fallback would cache its winner under
-                    # the pallas cache key
-                best_i = None
-        if best_i is None:
-            best_v = _math.inf
-            best_i = 0
-            for i in range(job.n_rows()):
-                v = score(evaluate_mapping(mat(i)))
-                if v < best_v:
-                    best_i, best_v = i, v
-        out.append(JobBest(tag=job.tag, index=best_i, value=best_v,
-                           n_scored=job.n_rows()))
+        with tr.span("per-arch.job", rows=job.n_rows()):
+            batch = job.packed if job.packed is not None else job.mappings
+            mat = (job.packed.materialize if job.packed is not None
+                   else job.mappings.__getitem__)
+            best_i = None
+            if use_batch and job.n_rows() >= 64:
+                try:
+                    best_i = batch_best_index(batch, goal, backend=backend)
+                    best_v = score(evaluate_mapping(mat(best_i)))
+                except Exception:
+                    if backend != "jnp":
+                        raise       # an explicit engine must fail loudly —
+                        # a silent jnp fallback would cache its winner
+                        # under the pallas cache key
+                    best_i = None
+            if best_i is None:
+                best_v = _math.inf
+                best_i = 0
+                for i in range(job.n_rows()):
+                    v = score(evaluate_mapping(mat(i)))
+                    if v < best_v:
+                        best_i, best_v = i, v
+            out.append(JobBest(tag=job.tag, index=best_i, value=best_v,
+                               n_scored=job.n_rows()))
     return out

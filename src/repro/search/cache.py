@@ -138,6 +138,10 @@ def decode_result(entry: Dict[str, Any], wl: Workload, hw: HardwareDesc):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class CacheStats:
+    """Per-cache traffic counters.  This is the one source of truth for
+    cache accounting: `run_search` derives its `n_cache_hits/misses` and
+    the memory/disk hit split in `SearchReport.summary()["cache"]` from
+    deltas of these counters (asserted equal in tests/test_obs.py)."""
     hits_memory: int = 0
     hits_disk: int = 0
     misses: int = 0
@@ -147,6 +151,12 @@ class CacheStats:
     @property
     def hits(self) -> int:
         return self.hits_memory + self.hits_disk
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"hits_memory": self.hits_memory,
+                "hits_disk": self.hits_disk, "hits": self.hits,
+                "misses": self.misses, "puts": self.puts,
+                "disk_evictions": self.disk_evictions}
 
 
 class ResultCache:
@@ -313,6 +323,7 @@ class ResultCache:
         O_EXCL lockfile and is skipped (returns 0) while another process
         holds it, so two concurrent searches on one cache directory can
         never double-evict."""
+        from ..obs import current_tracer
         self._puts_since_gc = 0
         if not self.path or (self.max_disk_entries is None
                              and self.max_disk_bytes is None):
@@ -320,7 +331,10 @@ class ResultCache:
         if not self._try_lock():
             return 0
         try:
-            return self._gc_locked()
+            with current_tracer().span("cache.gc") as sp:
+                evicted = self._gc_locked()
+                sp.set(evicted=evicted)
+            return evicted
         finally:
             self._unlock()
 

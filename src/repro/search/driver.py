@@ -20,6 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.evaluator import evaluate_network
@@ -30,6 +32,8 @@ from ..core.mapspace_array import build_packed_mapspace
 from ..core.evaluator import evaluate_mapping
 from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..core.workload import TENSORS
+from ..obs import (MANIFEST_DIR, ConsoleSink, ProgressStream, activate,
+                   as_stream, as_tracer, build_manifest)
 from .batch_frontier import MapspaceJob, fused_best, per_arch_best
 from .cache import ResultCache, cache_key, decode_result, encode_result
 from .constraints import ConstraintSet
@@ -79,6 +83,16 @@ class SearchReport:
     n_packed_builds: int = 0
     n_feasible: int = 0                  # evaluations satisfying constraints
     n_skipped_infeasible: int = 0        # rejected before any scoring
+    # observability (repro.obs): n_cache_hits/misses above are *derived*
+    # from the cache's own CacheStats delta over this run — one source of
+    # truth — and cache_stats carries the full split (memory vs disk
+    # hits, puts, GC evictions) that was previously collected but buried
+    wall_time_s: float = 0.0
+    cache_stats: Optional[Dict[str, int]] = None
+    phase_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    tracer: Any = None                   # Tracer when tracing was on
+    manifest: Any = None                 # RunManifest (cache-backed runs)
+    manifest_path: Optional[str] = None
 
     def goal_value(self) -> float:
         return self.best.goal_value(self.goal)
@@ -142,6 +156,16 @@ class SearchReport:
             "n_feasible": self.n_feasible,
             "n_skipped_infeasible": self.n_skipped_infeasible,
             "feasible_frac": self.feasible_frac,
+            "wall_time_s": self.wall_time_s,
+            # per-run cache traffic incl. the memory/disk hit split
+            "cache": self.cache_stats,
+            # seconds by driver phase (empty without an active tracer);
+            # matches the phase-flagged spans of the exported trace
+            "phase_times": self.phase_times,
+            "metrics": (self.tracer.metrics.snapshot()
+                        if self.tracer is not None
+                        and getattr(self.tracer, "enabled", False)
+                        else None),
             "pareto_size": len(self.pareto),
             "pareto": self.pareto.summary(),
             # steps before the first feasible evaluation are +inf in
@@ -161,7 +185,9 @@ class _Evaluator:
                  use_batch: bool, batching: str, cache: ResultCache,
                  report: SearchReport, backend: str = "jnp",
                  use_packed: bool = True,
-                 constraints: Optional[ConstraintSet] = None):
+                 constraints: Optional[ConstraintSet] = None,
+                 tracer=None, stream: Optional[ProgressStream] = None):
+        from ..obs import NULL_TRACER
         self.space = space
         self.workloads = workloads
         self.cfg = cfg
@@ -174,11 +200,32 @@ class _Evaluator:
         self.backend = backend          # resolved engine ("jnp"/"pallas")
         self.constraints = constraints
         self._cdigest = constraints.digest() if constraints else None
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.stream = stream if stream is not None else ProgressStream()
+        # cache counters are derived from the cache's own stats delta
+        # (CacheStats is the one source of truth; the driver used to
+        # count hits/misses independently and the split was never
+        # surfaced) — snapshot the baseline for this run
+        self._stats0 = dataclasses.replace(cache.stats)
         # the array-native pipeline drives the fused path; "per-arch"
         # keeps the seed's object semantics (bit-exact explorer parity)
         self.packed = use_packed and batching == "fused"
         self.rows_scored = 0            # mapspace rows sent to a scorer
         self.archs_scored = 0           # architectures those rows covered
+
+    def sync_cache_counters(self) -> None:
+        """Fold this run's CacheStats delta into the report (hit/miss
+        totals plus the memory/disk split and GC evictions)."""
+        s, s0 = self.cache.stats, self._stats0
+        self.report.n_cache_hits = s.hits - s0.hits
+        self.report.n_cache_misses = s.misses - s0.misses
+        self.report.cache_stats = {
+            "hits_memory": s.hits_memory - s0.hits_memory,
+            "hits_disk": s.hits_disk - s0.hits_disk,
+            "misses": s.misses - s0.misses,
+            "puts": s.puts - s0.puts,
+            "disk_evictions": s.disk_evictions - s0.disk_evictions,
+        }
 
     def _mapspace_and_key(self, coords: Coords, hw, wl, memo: Dict):
         """-> (packed_or_none, key).  The packed pipeline builds the
@@ -204,23 +251,31 @@ class _Evaluator:
 
     def __call__(self, batch: Sequence[Coords]) \
             -> Dict[Coords, Union[ArchResult, SkippedArch]]:
-        # pass 1: cache consult; collect mapspace jobs for the misses
+        tr = self.tracer
+        # pass 1a: static constraint filter on the hardware description
+        # alone — rejected designs never build, pack, or score a mapspace
         decoded: Dict[Tuple[Coords, str], WorkloadResult] = {}
         keymaps: Dict[Coords, List[str]] = {}
         jobs: List[MapspaceJob] = []
         meta: Dict[Tuple[Coords, str], Tuple[int, int]] = {}
         ms_memo: Dict[object, Tuple[object, str]] = {}
         skipped: Dict[Coords, SkippedArch] = {}
-        for coords in batch:
-            hw = self.space.at(coords)
-            if self.constraints is not None \
-                    and self.constraints.statically_infeasible(hw):
-                # the hardware description alone already violates a
-                # budget: no mapspace is built, packed, or kernel-scored
-                skipped[coords] = SkippedArch(
-                    hardware=hw,
-                    violation=self.constraints.static_violation(hw))
-                continue
+        survivors: List[Tuple[Coords, Any]] = []
+        with tr.span("static-filter", phase=True, archs=len(batch)) as sp:
+            for coords in batch:
+                hw = self.space.at(coords)
+                if self.constraints is not None \
+                        and self.constraints.statically_infeasible(hw):
+                    skipped[coords] = SkippedArch(
+                        hardware=hw,
+                        violation=self.constraints.static_violation(hw))
+                    continue
+                survivors.append((coords, hw))
+            sp.set(skipped=len(skipped))
+
+        # pass 1b: cache consult (pack/validate spans come from the
+        # mapspace builders); collect mapspace jobs for the misses
+        for coords, hw in survivors:
             keys: List[str] = []
             for wl in self.workloads.intra:
                 pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo)
@@ -228,12 +283,19 @@ class _Evaluator:
                 tag = (coords, k)
                 if tag in decoded or tag in meta:
                     continue            # repeated layer within this arch
-                entry = self.cache.get(k)
+                with tr.span("cache-get", phase=True) as cs:
+                    entry = self.cache.get(k)
+                    if entry is not None:
+                        decoded[tag] = decode_result(entry, wl, hw)
+                        cs.set(hit=True)
                 if entry is not None:
-                    decoded[tag] = decode_result(entry, wl, hw)
-                    self.report.n_cache_hits += 1
+                    if self.stream.active:
+                        self.stream.emit("cache-lookup", hit=True,
+                                         arch=hw.name, workload=wl.name)
                     continue
-                self.report.n_cache_misses += 1
+                if self.stream.active:
+                    self.stream.emit("cache-lookup", hit=False,
+                                     arch=hw.name, workload=wl.name)
                 self.report.n_enumerations += 1
                 if pm is not None:
                     if not len(pm):
@@ -257,53 +319,62 @@ class _Evaluator:
         # pass 2: score all pending mapspaces (fused across architectures,
         # or per-job with seed semantics)
         if jobs:
-            if self.batching == "fused":
-                bests = fused_best(jobs, self.goal, backend=self.backend)
-            else:
-                bests = per_arch_best(jobs, self.goal, self.use_batch,
-                                      backend=self.backend)
-            self.rows_scored += sum(j.n_rows() for j in jobs)
+            n_rows = sum(j.n_rows() for j in jobs)
+            with tr.span("score", phase=True, jobs=len(jobs),
+                         rows=n_rows, scorer=self.batching,
+                         backend=self.backend):
+                if self.batching == "fused":
+                    bests = fused_best(jobs, self.goal,
+                                       backend=self.backend)
+                else:
+                    bests = per_arch_best(jobs, self.goal, self.use_batch,
+                                          backend=self.backend)
+            tr.metrics.counter("search.rows_scored").inc(n_rows)
+            self.rows_scored += n_rows
             # only architectures that actually contributed jobs — counting
             # fully-cache-served archs would skew mean rows/arch low and
             # inflate the auto round size
             self.archs_scored += len({j.tag[0] for j in jobs})
-            for job, b in zip(jobs, bests):
-                # winner-only materialization: the packed pipeline never
-                # builds Mapping objects for the losers
-                m = (job.packed.materialize(b.index)
-                     if job.packed is not None else job.mappings[b.index])
-                est = evaluate_mapping(m)
-                total, n_valid = meta[job.tag]
-                r = WorkloadResult(workload=job.workload, mapping=m,
-                                   estimate=est, mapspace_size=total,
-                                   n_valid=n_valid)
-                decoded[job.tag] = r
-                self.cache.put(job.tag[1], encode_result(r))
+            with tr.span("cache-put", phase=True, jobs=len(jobs)):
+                for job, b in zip(jobs, bests):
+                    # winner-only materialization: the packed pipeline
+                    # never builds Mapping objects for the losers
+                    m = (job.packed.materialize(b.index)
+                         if job.packed is not None
+                         else job.mappings[b.index])
+                    est = evaluate_mapping(m)
+                    total, n_valid = meta[job.tag]
+                    r = WorkloadResult(workload=job.workload, mapping=m,
+                                       estimate=est, mapspace_size=total,
+                                       n_valid=n_valid)
+                    decoded[job.tag] = r
+                    self.cache.put(job.tag[1], encode_result(r))
 
         # pass 3: network-level assembly per architecture (Algorithm 1
         # lines 12-14; mirrors core.explorer.evaluate_architecture)
         out: Dict[Coords, ArchResult] = {}
         out.update(skipped)
-        for coords in batch:
-            if coords in skipped:
-                continue
-            hw = self.space.at(coords)
-            results = [
-                dataclasses.replace(decoded[(coords, k)], workload=wl)
-                for wl, k in zip(self.workloads.intra, keymaps[coords])]
-            max_buf = 0.0
-            for r in results:
-                for li in hw.memory_level_indices():
-                    if hw.tiling_levels[li].name == self.cache_level:
-                        used = sum(r.mapping.buffer_words(li, t)
-                                   for t in TENSORS)
-                        max_buf = max(max_buf, used)
-            network = evaluate_network(
-                hw, [r.estimate for r in results], self.workloads.preproc,
-                self.workloads.activations, cache_level=self.cache_level,
-                mapping_buffer_words=max_buf)
-            out[coords] = ArchResult(hardware=hw, network=network,
-                                     per_workload=results)
+        with tr.span("assemble", phase=True, archs=len(survivors)):
+            for coords, hw in survivors:
+                results = [
+                    dataclasses.replace(decoded[(coords, k)], workload=wl)
+                    for wl, k in zip(self.workloads.intra,
+                                     keymaps[coords])]
+                max_buf = 0.0
+                for r in results:
+                    for li in hw.memory_level_indices():
+                        if hw.tiling_levels[li].name == self.cache_level:
+                            used = sum(r.mapping.buffer_words(li, t)
+                                       for t in TENSORS)
+                            max_buf = max(max_buf, used)
+                network = evaluate_network(
+                    hw, [r.estimate for r in results],
+                    self.workloads.preproc, self.workloads.activations,
+                    cache_level=self.cache_level,
+                    mapping_buffer_words=max_buf)
+                out[coords] = ArchResult(hardware=hw, network=network,
+                                         per_workload=results)
+        self.sync_cache_counters()
         return out
 
 
@@ -342,6 +413,8 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                round_size: Union[int, str] = 8,
                use_packed: bool = True,
                strategy_params: Optional[Dict[str, Any]] = None,
+               trace: Union[None, bool, Any] = None,
+               progress: Any = None,
                verbose: bool = False) -> SearchReport:
     """Multi-strategy, multi-objective design-space exploration.
 
@@ -377,6 +450,20 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  materialization, content-digest cache keys); False keeps
                  the legacy object pipeline (identical winners — asserted
                  in tests and benchmarked in bench_mapspace_throughput)
+    trace      : observability (`repro.obs`): None inherits the ambient
+                 tracer (a no-op unless `obs.activate` scoped one), True
+                 records into a fresh `Tracer` (returned as
+                 `report.tracer`), False forces tracing off, or pass a
+                 `Tracer`.  Spans are host-side only; per-round phases
+                 (propose / static-filter / pack / validate / score /
+                 cache-get / cache-put / assemble / frontier-update)
+                 land in `report.phase_times` and the Chrome/JSONL
+                 exports.  The default is zero-overhead.
+    progress   : a ProgressStream, sink callable, or list of sinks fed
+                 typed `ProgressEvent`s (arch evaluated/skipped, cache
+                 lookups, frontier growth, round completion) — the
+                 streaming channel for a DSE service.  `verbose=True`
+                 subscribes the ConsoleSink (historical print format).
     """
     from ..core.backend import resolve_backend
     if batching not in ("fused", "per-arch"):
@@ -404,16 +491,24 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
     budget = space.size if budget is None else max(1, min(budget,
                                                           space.size))
 
+    tracer = as_tracer(trace)
+    stream = as_stream(progress)
+    if verbose:
+        # the historical verbose=True output, now one code path: a
+        # console sink rendering the per-architecture progress events
+        stream.subscribe(ConsoleSink())
+
     report = SearchReport(goal=goal, strategy=strat.name,
                           objectives=tuple(objectives), budget=budget,
                           space_size=space.size, best=None,   # type: ignore
                           best_coords=(), all_archs=[],
                           pareto=ParetoFront(objectives), history=[],
-                          backend=backend, constraints=cset)
+                          backend=backend, constraints=cset,
+                          tracer=tracer if tracer.enabled else None)
     evaluate = _Evaluator(space, workloads, cfg, goal, cache_level,
                           use_batch, batching, cache, report,
                           backend=backend, use_packed=use_packed,
-                          constraints=cset)
+                          constraints=cset, tracer=tracer, stream=stream)
 
     # duck-typed: pre-registry Strategy objects may predate the hooks
     _observe = getattr(strat, "observe", lambda c, o, f=True: None)
@@ -430,87 +525,126 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
 
     cur_round = 8 if auto_round else round_size
     stall_rounds = 0
-    while report.n_evaluated < budget and not strat.exhausted:
-        if len(memo) >= space.size or stall_rounds >= 100:
-            break                       # nothing fresh left to evaluate
-        want = min(cur_round, budget - report.n_evaluated)
-        proposals = strat.ask(want)
-        if not proposals:
-            break                       # strategy is awaiting nothing: stop
-        seen_round = set()
-        ordered: List[Coords] = []
-        for c in proposals:
-            c = tuple(c)
-            if c not in seen_round:
-                seen_round.add(c)
-                ordered.append(c)
-        fresh = [c for c in ordered if c not in memo]
-        stall_rounds = 0 if fresh else stall_rounds + 1
-        if fresh:
-            memo.update(evaluate(fresh))
-            if auto_round and evaluate.archs_scored:
-                sized = auto_round_size(evaluate.rows_scored
-                                        / evaluate.archs_scored)
-                if sized is not None:
-                    cur_round = sized
-        feedback: List[Tuple[Coords, float]] = []
-        fresh_set = set(fresh)
-        for c in ordered:
-            res = memo[c]
-            if isinstance(res, SkippedArch):
-                # statically rejected: the strategy still learns (ordered
-                # by violation), but nothing joins frontier/all_archs
-                val = cset.skip_value(res.violation)
-                feedback.append((c, val))
-                if c in fresh_set:
-                    report.n_evaluated += 1
-                    report.n_skipped_infeasible += 1
-                    report.history.append({
-                        "step": report.n_evaluated, "coords": c,
-                        "arch": res.hardware.name, "value": val,
-                        "objectives": None, "feasible": False,
-                        "skipped": True})
-                    _observe(c, None, False)
-                    if verbose:
-                        print(f"  {res.hardware.name:28s} statically "
-                              f"infeasible (violation "
-                              f"{res.violation:.3f})")
-                else:
-                    report.n_revisits += 1
-                continue
-            raw = res.goal_value(goal)
-            obj_vals = objective_values(res.network, report.objectives)
-            if cset is None:
-                feasible, val = True, raw
-            else:
-                violation = cset.violation(res.network, res.hardware)
-                feasible = violation <= 0.0
-                val = raw if feasible else cset.penalized(raw, violation)
-            feedback.append((c, val))
-            if c in fresh_set:
-                report.n_evaluated += 1
-                report.all_archs.append(res)
-                if feasible:
-                    report.n_feasible += 1
-                    report.pareto.add_network(res.hardware.name,
-                                              res.network, payload=res)
-                    if best is None or raw < best_val:
-                        best, best_coords, best_val = res, c, raw
-                report.history.append({
-                    "step": report.n_evaluated, "coords": c,
-                    "arch": res.hardware.name, "value": val,
-                    "objectives": obj_vals, "feasible": feasible})
-                _observe(c, obj_vals, feasible)
-                if verbose:
-                    n = res.network
-                    print(f"  {res.hardware.name:28s} "
-                          f"cycles={n.cycles:.3e} "
-                          f"energy={n.energy_pj:.3e}pJ edp={n.edp:.3e}"
-                          + ("" if feasible else "  [infeasible]"))
-            else:
-                report.n_revisits += 1
-        strat.tell(feedback)
+    n_rounds = 0
+    t_begin = time.perf_counter()
+    # the tracer becomes ambient for the whole search, so instrumented
+    # library code (mapper, backend, batch_frontier, cache) records into
+    # it without parameter plumbing; all spans are host-side only
+    with activate(tracer), tracer.span("run_search", strategy=strat.name,
+                                       backend=backend, goal=goal,
+                                       budget=budget,
+                                       space_size=space.size):
+        while report.n_evaluated < budget and not strat.exhausted:
+            if len(memo) >= space.size or stall_rounds >= 100:
+                break                   # nothing fresh left to evaluate
+            want = min(cur_round, budget - report.n_evaluated)
+            with tracer.span("propose", phase=True, round=n_rounds,
+                             want=want) as psp:
+                proposals = strat.ask(want)
+                seen_round = set()
+                ordered: List[Coords] = []
+                for c in proposals:
+                    c = tuple(c)
+                    if c not in seen_round:
+                        seen_round.add(c)
+                        ordered.append(c)
+                fresh = [c for c in ordered if c not in memo]
+                psp.set(proposed=len(ordered), fresh=len(fresh))
+            if not proposals:
+                break                   # strategy is awaiting nothing: stop
+            stall_rounds = 0 if fresh else stall_rounds + 1
+            if fresh:
+                memo.update(evaluate(fresh))
+                if auto_round and evaluate.archs_scored:
+                    sized = auto_round_size(evaluate.rows_scored
+                                            / evaluate.archs_scored)
+                    if sized is not None:
+                        cur_round = sized
+            feedback: List[Tuple[Coords, float]] = []
+            fresh_set = set(fresh)
+            with tracer.span("frontier-update", phase=True,
+                             round=n_rounds):
+                for c in ordered:
+                    res = memo[c]
+                    if isinstance(res, SkippedArch):
+                        # statically rejected: the strategy still learns
+                        # (ordered by violation), but nothing joins
+                        # frontier/all_archs
+                        val = cset.skip_value(res.violation)
+                        feedback.append((c, val))
+                        if c in fresh_set:
+                            report.n_evaluated += 1
+                            report.n_skipped_infeasible += 1
+                            report.history.append({
+                                "step": report.n_evaluated, "coords": c,
+                                "arch": res.hardware.name, "value": val,
+                                "objectives": None, "feasible": False,
+                                "skipped": True})
+                            _observe(c, None, False)
+                            stream.emit("arch-skipped",
+                                        arch=res.hardware.name,
+                                        violation=res.violation,
+                                        step=report.n_evaluated)
+                        else:
+                            report.n_revisits += 1
+                        continue
+                    raw = res.goal_value(goal)
+                    obj_vals = objective_values(res.network,
+                                                report.objectives)
+                    if cset is None:
+                        feasible, val = True, raw
+                    else:
+                        violation = cset.violation(res.network,
+                                                   res.hardware)
+                        feasible = violation <= 0.0
+                        val = raw if feasible \
+                            else cset.penalized(raw, violation)
+                    feedback.append((c, val))
+                    if c in fresh_set:
+                        report.n_evaluated += 1
+                        report.all_archs.append(res)
+                        if feasible:
+                            report.n_feasible += 1
+                            front_n = len(report.pareto)
+                            report.pareto.add_network(res.hardware.name,
+                                                      res.network,
+                                                      payload=res)
+                            if len(report.pareto) > front_n:
+                                stream.emit(
+                                    "frontier-grew",
+                                    arch=res.hardware.name,
+                                    size=len(report.pareto),
+                                    step=report.n_evaluated)
+                            if best is None or raw < best_val:
+                                best, best_coords, best_val = res, c, raw
+                        report.history.append({
+                            "step": report.n_evaluated, "coords": c,
+                            "arch": res.hardware.name, "value": val,
+                            "objectives": obj_vals, "feasible": feasible})
+                        _observe(c, obj_vals, feasible)
+                        n = res.network
+                        stream.emit("arch-evaluated",
+                                    arch=res.hardware.name,
+                                    cycles=n.cycles,
+                                    energy_pj=n.energy_pj, edp=n.edp,
+                                    value=val, feasible=feasible,
+                                    step=report.n_evaluated)
+                    else:
+                        report.n_revisits += 1
+                strat.tell(feedback)
+            n_rounds += 1
+            stream.emit("round-finished", round=n_rounds,
+                        n_evaluated=report.n_evaluated,
+                        n_fresh=len(fresh),
+                        best_value=(best_val if best is not None
+                                    else None),
+                        pareto_size=len(report.pareto))
 
+    evaluate.sync_cache_counters()
+    report.wall_time_s = time.perf_counter() - t_begin
+    if tracer.enabled:
+        report.phase_times = tracer.phase_times()
+        tracer.metrics.counter("search.rounds").inc(n_rounds)
     if best is None:
         if cset is not None:
             raise RuntimeError(
@@ -522,4 +656,18 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                            "(empty space or zero budget)")
     report.best = best
     report.best_coords = best_coords
+    stream.emit("search-finished", n_evaluated=report.n_evaluated,
+                best_arch=report.best.hardware.name,
+                best_value=report.goal_value(),
+                wall_time_s=report.wall_time_s)
+    # provenance manifest, written alongside the cached results so any
+    # disk-cache entry can be attributed to the run that produced it
+    if cache.path:
+        report.manifest = build_manifest(
+            report, space, wall_time_s=report.wall_time_s, tracer=tracer)
+        report.manifest_path = report.manifest.write(
+            os.path.join(cache.path, MANIFEST_DIR))
+    elif tracer.enabled:
+        report.manifest = build_manifest(
+            report, space, wall_time_s=report.wall_time_s, tracer=tracer)
     return report

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..models import decode_step, forward, init_cache
+from ..obs import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -31,9 +32,10 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int = 4,
                  max_len: int = 256, eos_id: int = -1,
-                 greedy: bool = True):
+                 greedy: bool = True, tracer=None):
         self.cfg = cfg
         self.params = params
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.batch = batch
         self.max_len = max_len
         self.eos_id = eos_id
@@ -61,42 +63,54 @@ class ServeEngine:
         # teacher-forced token-by-token prefill into this slot's cache
         # region (keeps a single compiled decode program; a production
         # deployment would use the fused prefill step per slot batch).
-        for j, tok in enumerate(req.prompt):
-            t = np.zeros((self.batch,), np.int32)
-            t[slot] = tok
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(t), int(j))
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
-        self.slot_budget[slot] = req.max_new_tokens
-        last = np.asarray(logits)[slot]
-        req.out_tokens.append(int(last.argmax()))
+        with self.tracer.span("serve.prefill", rid=req.rid, slot=slot,
+                              tokens=len(req.prompt)):
+            for j, tok in enumerate(req.prompt):
+                t = np.zeros((self.batch,), np.int32)
+                t[slot] = tok
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(t), int(j))
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+            self.slot_budget[slot] = req.max_new_tokens
+            last = np.asarray(logits)[slot]
+            req.out_tokens.append(int(last.argmax()))
 
     # -- decode tick ---------------------------------------------------------
     def step(self):
-        self._admit()
-        active = [i for i in range(self.batch)
-                  if self.slot_req[i] is not None]
-        if not active:
-            return False
-        toks = np.zeros((self.batch,), np.int32)
-        for i in active:
-            toks[i] = self.slot_req[i].out_tokens[-1]
-        pos = int(max(self.slot_pos[i] for i in active))
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks), pos)
-        logits = np.asarray(logits)
-        for i in active:
-            req = self.slot_req[i]
-            nxt = int(logits[i].argmax())
-            req.out_tokens.append(nxt)
-            self.slot_pos[i] += 1
-            self.slot_budget[i] -= 1
-            if (nxt == self.eos_id or self.slot_budget[i] <= 0
-                    or self.slot_pos[i] >= self.max_len - 1):
-                self.done[req.rid] = req
-                self.slot_req[i] = None
-        return True
+        with self.tracer.span("serve.tick", phase=True) as tick:
+            with self.tracer.span("serve.admit"):
+                self._admit()
+            active = [i for i in range(self.batch)
+                      if self.slot_req[i] is not None]
+            self.tracer.metrics.gauge("serve.slots_active").set(len(active))
+            tick.set(active=len(active))
+            if not active:
+                return False
+            toks = np.zeros((self.batch,), np.int32)
+            for i in active:
+                toks[i] = self.slot_req[i].out_tokens[-1]
+            pos = int(max(self.slot_pos[i] for i in active))
+            # np.asarray inside the span: the device round-trip (JAX async
+            # dispatch) is attributed to the decode that launched it.
+            with self.tracer.span("serve.decode", active=len(active),
+                                  pos=pos):
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  jnp.asarray(toks), pos)
+                logits = np.asarray(logits)
+            for i in active:
+                req = self.slot_req[i]
+                nxt = int(logits[i].argmax())
+                req.out_tokens.append(nxt)
+                self.slot_pos[i] += 1
+                self.slot_budget[i] -= 1
+                if (nxt == self.eos_id or self.slot_budget[i] <= 0
+                        or self.slot_pos[i] >= self.max_len - 1):
+                    self.done[req.rid] = req
+                    self.slot_req[i] = None
+            self.tracer.metrics.counter("serve.tokens_decoded").inc(
+                len(active))
+            return True
 
     def run_until_drained(self, max_ticks: int = 10_000):
         ticks = 0
