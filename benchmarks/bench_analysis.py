@@ -1,0 +1,48 @@
+"""Static-analysis throughput benchmark (ISSUE 7).
+
+trimlint (`repro.analysis`) is meant to run on every CI push and as a
+pre-commit habit, so the full pass has to stay interactive: the claim is
+a complete 5-rule run over `src/repro` (+ `tests/`) in under 5 s on CI
+hardware.  The index build is timed separately so parse cost vs rule
+cost stays visible in the BENCH trajectory.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.analysis import build_index, run_analysis
+
+from .common import claim
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run():
+    out = {}
+    t0 = time.time()
+    index = build_index(ROOT)
+    out["index_s"] = time.time() - t0
+    out["n_modules"] = len(index.modules) + len(index.tests)
+
+    t1 = time.time()
+    findings = run_analysis(ROOT)
+    out["full_s"] = time.time() - t1
+    out["n_findings"] = len(findings)
+
+    claim(out, "trimlint-full-repo<5s", out["full_s"] < 5.0,
+          f"{out['full_s']:.2f}s for {out['n_modules']} modules, "
+          f"{out['n_findings']} finding(s)")
+    claim(out, "trimlint-head-clean", not findings,
+          "HEAD is clean (empty baseline)" if not findings else
+          "; ".join(f.render() for f in findings[:3]))
+    return out
+
+
+def rows(res):
+    return [
+        ("trimlint_index", res["index_s"] * 1e6,
+         f"modules={res['n_modules']}"),
+        ("trimlint_full", res["full_s"] * 1e6,
+         f"findings={res['n_findings']}"),
+    ]

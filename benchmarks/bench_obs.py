@@ -24,7 +24,7 @@ import os
 import time
 
 from repro.core.task_analyst import NETWORKS
-from repro.obs import NULL_TRACER, Tracer
+from repro.obs import DRIVER_PHASES, NULL_TRACER, Tracer
 from repro.search import ArchSpace, run_search
 
 from .common import Timer, claim, mapper_cfg
@@ -33,8 +33,8 @@ PES = (256, 512, 1024)
 RFS = (128, 256, 512)
 GBUFS = (64 * 1024, 128 * 1024, 256 * 1024)
 
-PHASES = ("propose", "static-filter", "pack", "validate", "cache-get",
-          "score", "cache-put", "assemble", "frontier-update")
+# the canonical driver phase list (repro.obs.trace) — one source of truth
+PHASES = DRIVER_PHASES
 
 
 def _trace_path():

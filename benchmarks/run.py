@@ -30,6 +30,7 @@ MODULES = [
     ("bench_search_strategies", {"max_mappings": 800}),
     ("bench_trim_planner", {}),
     ("bench_obs", {"max_mappings": 1500}),
+    ("bench_analysis", {}),
 ]
 
 FAST_OVERRIDES = {"max_mappings": 600}

@@ -1,0 +1,33 @@
+"""repro.analysis — trimlint, a repo-aware static-analysis pass.
+
+The reproduction's trustworthiness hinges on invariants no unit test can
+see syntactically:
+
+  * the content-addressed result-cache key must cover every input that
+    affects scoring (CACHE_FORMAT has been bumped three times for
+    exactly this bug class) — R-CACHE;
+  * host<->device sync points (`np.asarray` / `.item()` / `float()` /
+    `block_until_ready` on JAX values) must stay inside trace spans so
+    phase attribution stays honest — R-SYNC;
+  * scoring, digest, and strategy ask/tell paths must be deterministic
+    for warm-cache replay — R-DET;
+  * spans open only via context manager and driver phases come from one
+    canonical tuple — R-TRACE;
+  * the strategy registry and ProgressEvent kinds stay covered by their
+    contract test / console sink — R-REG.
+
+`engine.build_index` walks `src/repro` (plus `tests/`) into a light
+module/function/call index; rules under `rules/` consume it and return
+`Finding`s.  Everything is stdlib-only (`ast`, `json`, `pathlib`) so the
+CI gate needs no dependency install.
+
+    python -m repro.analysis --strict --format sarif
+
+See docs/static-analysis.md for the rule catalog and baseline workflow.
+"""
+from .engine import (Finding, Module, RepoIndex, build_index, find_root,
+                     run_analysis)
+from .rules import RULES, get_rules
+
+__all__ = ["Finding", "Module", "RepoIndex", "build_index", "find_root",
+           "run_analysis", "RULES", "get_rules"]

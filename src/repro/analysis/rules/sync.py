@@ -1,0 +1,388 @@
+"""R-SYNC — host<->device sync discipline.
+
+JAX dispatch is async: device time is only attributable to a phase if
+the ``np.asarray`` / ``float()`` / ``.item()`` / ``.block_until_ready``
+that *forces* the result executes inside the trace span that launched
+the work (see the instrumentation rules in ``repro.obs``).  A sync that
+escapes every span silently moves device seconds into whatever phase
+happens to force the value later — the exact bug class PR 5 fixed.
+
+This is a light device-taint analysis, not a linter over every
+``np.asarray`` (most of those are host-side packing and perfectly
+fine):
+
+  * **device sources** — functions whose bodies call ``jax.numpy.*`` /
+    ``jax.lax.*`` / ``jax.jit`` / pallas, transitively through the
+    in-repo call graph; module-level ``x = jax.jit(...)`` names and
+    ``self.x = jax.jit(...)`` class attrs count too;
+  * **barriers** — a device-calling function whose every ``return``
+    expression is host-shaped (built from ``np.asarray(...)`` /
+    ``float(...)`` values) returns *host* data: callers are clean;
+  * **sync points** — forcing calls applied to tainted values inside
+    ``core/``, ``search/``, ``serve/``.  A sync is OK when it sits
+    lexically inside a ``with *.span(...)`` block, or when every in-repo
+    callsite of its enclosing function does (caller-bracket: the span
+    that launched the work brackets the helper that forces it).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..engine import Finding, Module, RepoIndex
+from . import register_rule
+
+SCOPE = ("core/", "search/", "serve/")
+
+DEVICE_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.",
+                   "jax.experimental.")
+DEVICE_EXACT = {"jax.jit", "jax.vmap", "jax.pmap", "jax.device_put",
+                "jax.block_until_ready"}
+SYNC_CALLS = {"numpy.asarray", "numpy.array"}
+SYNC_BUILTINS = {"float", "int", "bool"}
+SYNC_METHODS = {"item", "block_until_ready", "tolist", "__array__"}
+
+
+def _is_device_target(dotted: Optional[str]) -> bool:
+    if dotted is None:
+        return False
+    return dotted in DEVICE_EXACT or \
+        any(dotted.startswith(p) for p in DEVICE_PREFIXES)
+
+
+def _dotted_chain(expr: ast.AST) -> Optional[str]:
+    """'self.cache' / 'x' style chains for taint bookkeeping."""
+    parts: List[str] = []
+    cur = expr
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+# ---------------------------------------------------------------------------
+# classification: which functions return device values?
+# ---------------------------------------------------------------------------
+class _Classifier:
+    def __init__(self, index: RepoIndex):
+        self.index = index
+        # dotted fn -> (module, node)
+        self.fns: Dict[str, Tuple[Module, ast.AST]] = {}
+        for mod in index.modules.values():
+            for qual, node in mod.functions.items():
+                self.fns[f"{mod.dotted}.{qual}"] = (mod, node)
+        self.device_names: Set[str] = set()     # jitted module/class attrs
+        self._find_device_names()
+        self.direct = {d: self._direct_device(*self.fns[d])
+                       for d in self.fns}
+        self.callees = {d: self._repo_callees(*self.fns[d])
+                        for d in self.fns}
+        self.ret_dev: Dict[str, bool] = {d: False for d in self.fns}
+        self._fixpoint()
+
+    def _find_device_names(self) -> None:
+        for mod in self.index.modules.values():
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Assign):
+                    continue
+                if not self._contains_device_call(mod, node.value):
+                    continue
+                for t in node.targets:
+                    chain = _dotted_chain(t)
+                    if chain is None:
+                        continue
+                    if chain.startswith("self."):
+                        qual = mod.enclosing_function(node)
+                        if qual and "." in qual:
+                            cls = qual.split(".")[0]
+                            self.device_names.add(
+                                f"{mod.dotted}.{cls}.{chain[5:]}")
+                    elif mod.parents.get(node) is mod.tree:
+                        self.device_names.add(f"{mod.dotted}.{chain}")
+
+    def _contains_device_call(self, mod: Module, expr: ast.AST) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call) and \
+                    _is_device_target(self.index.resolve_call(mod, n)):
+                return True
+        return False
+
+    def _direct_device(self, mod: Module, fn: ast.AST) -> bool:
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in fn.decorator_list:
+                target = self.index.resolve_name(mod, dec) if not \
+                    isinstance(dec, ast.Call) else \
+                    self.index.resolve_call(mod, dec)
+                if _is_device_target(target):
+                    return True
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Call):
+                target = self.index.resolve_call(mod, n)
+                if _is_device_target(target) or \
+                        target in self.device_names:
+                    return True
+        return False
+
+    def _is_barrier(self, mod: Module, fn: ast.AST) -> bool:
+        """Every return expression is host-shaped: np.asarray/float/int
+        calls, in-repo calls currently known host-returning, names
+        assigned from such, tuples/constants thereof.  Re-evaluated each
+        fixpoint round (in-repo host-ness can flip as ret_dev grows)."""
+        host_names: Set[str] = set()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and \
+                    self._host_shaped(mod, n.value, host_names):
+                for t in n.targets:
+                    targets = t.elts if isinstance(t, (ast.Tuple,
+                                                       ast.List)) else [t]
+                    for e in targets:
+                        if isinstance(e, ast.Name):
+                            host_names.add(e.id)
+        returns = [n for n in ast.walk(fn)
+                   if isinstance(n, ast.Return) and n.value is not None]
+        return bool(returns) and all(
+            self._host_shaped(mod, r.value, host_names) for r in returns)
+
+    def _host_shaped(self, mod: Module, expr: ast.AST,
+                     host_names: Set[str]) -> bool:
+        if isinstance(expr, ast.Constant):
+            return True
+        if isinstance(expr, ast.Name):
+            return expr.id in host_names
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return all(self._host_shaped(mod, e, host_names)
+                       for e in expr.elts)
+        if isinstance(expr, ast.Subscript):
+            return self._host_shaped(mod, expr.value, host_names)
+        if isinstance(expr, ast.Call):
+            if isinstance(expr.func, ast.Name) and \
+                    expr.func.id in SYNC_BUILTINS:
+                return True
+            target = self.index.resolve_call(mod, expr)
+            if target in SYNC_CALLS:
+                return True
+            if _is_device_target(target) or target in self.device_names:
+                return False
+            if target in self.fns:
+                return not self.ret_dev[target]
+        return False
+
+    def _repo_callees(self, mod: Module, fn: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Call):
+                target = self.index.resolve_call(mod, n)
+                if target and target in self.fns:
+                    out.add(target)
+        return out
+
+    def _fixpoint(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for d in self.fns:
+                if self.ret_dev[d]:
+                    continue
+                now = self.direct[d] or \
+                    any(self.ret_dev[c] for c in self.callees[d])
+                if now and not self._is_barrier(*self.fns[d]):
+                    self.ret_dev[d] = True
+                    changed = True
+
+    def call_returns_device(self, mod: Module, call: ast.Call) -> bool:
+        target = self.index.resolve_call(mod, call)
+        if target is None:
+            return False
+        if _is_device_target(target) and target not in (
+                "jax.block_until_ready",):
+            return True
+        if target in self.device_names:
+            return True
+        return bool(self.ret_dev.get(target))
+
+
+# ---------------------------------------------------------------------------
+# per-function taint walk
+# ---------------------------------------------------------------------------
+class _TaintWalker:
+    def __init__(self, cls: _Classifier, mod: Module, qual: str,
+                 fn: ast.AST):
+        self.cls = cls
+        self.index = cls.index
+        self.mod = mod
+        self.qual = qual
+        self.fn = fn
+        self.tainted: Set[str] = set()
+        self.syncs: List[Tuple[ast.AST, str]] = []   # (node, op label)
+
+    def run(self) -> List[Tuple[ast.AST, str]]:
+        stmts = sorted(
+            (n for n in ast.walk(self.fn)
+             if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                               ast.Expr, ast.Return, ast.For, ast.withitem))
+             ), key=lambda n: (getattr(n, "lineno", 0),
+                               getattr(n, "col_offset", 0)))
+        for _ in range(2):              # second pass settles loop carries
+            self.syncs = []
+            for st in stmts:
+                self._stmt(st)
+        return self.syncs
+
+    def _stmt(self, st: ast.AST) -> None:
+        if isinstance(st, ast.Assign):
+            t = self._taint(st.value)
+            for target in st.targets:
+                self._bind(target, t)
+        elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            if st.value is not None:
+                t = self._taint(st.value)
+                if isinstance(st, ast.AnnAssign):
+                    self._bind(st.target, t)
+                elif t:
+                    self._bind(st.target, True)
+        elif isinstance(st, ast.For):
+            if self._taint(st.iter):
+                self._bind(st.target, True)
+        elif isinstance(st, ast.withitem):
+            self._taint(st.context_expr)
+        elif isinstance(st, (ast.Expr, ast.Return)):
+            if st.value is not None:
+                self._taint(st.value)
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, tainted)
+            return
+        chain = _dotted_chain(target)
+        if chain is None:
+            return
+        if tainted:
+            self.tainted.add(chain)
+        else:
+            self.tainted.discard(chain)
+
+    def _taint(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            chain = _dotted_chain(e)
+            if chain is not None:
+                if chain in self.tainted:
+                    return True
+                head = chain.split(".")[0]
+                return head != "self" and head in self.tainted
+            return self._taint(e.value)
+        if isinstance(e, ast.Call):
+            return self._call(e)
+        if isinstance(e, ast.Subscript):
+            self._taint(e.slice)
+            return self._taint(e.value)
+        if isinstance(e, (ast.BinOp,)):
+            l, r = self._taint(e.left), self._taint(e.right)
+            return l or r
+        if isinstance(e, ast.UnaryOp):
+            return self._taint(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any(self._taint(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            vals = [self._taint(e.left)] + \
+                [self._taint(c) for c in e.comparators]
+            return any(vals)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self._taint(el) for el in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self._taint(v) for v in e.values if v is not None)
+        if isinstance(e, ast.IfExp):
+            self._taint(e.test)
+            a, b = self._taint(e.body), self._taint(e.orelse)
+            return a or b
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self._taint(e.elt)
+        if isinstance(e, ast.Starred):
+            return self._taint(e.value)
+        if isinstance(e, ast.JoinedStr):
+            for v in e.values:
+                if isinstance(v, ast.FormattedValue):
+                    self._taint(v.value)
+            return False
+        return False
+
+    def _call(self, e: ast.Call) -> bool:
+        target = self.index.resolve_call(self.mod, e)
+        # -- forcing (sync) forms ----------------------------------------
+        if target in SYNC_CALLS:
+            if any(self._taint(a) for a in e.args):
+                self.syncs.append((e, target.split(".")[-1]))
+            for kw in e.keywords:
+                self._taint(kw.value)
+            return False                        # result is host
+        if target is None and isinstance(e.func, ast.Name) and \
+                e.func.id in SYNC_BUILTINS:
+            if any(self._taint(a) for a in e.args):
+                self.syncs.append((e, e.func.id))
+            return False
+        if isinstance(e.func, ast.Attribute) and \
+                e.func.attr in SYNC_METHODS and target is None:
+            if self._taint(e.func.value):
+                self.syncs.append((e, f".{e.func.attr}()"))
+            return False
+        if target == "jax.block_until_ready":
+            if any(self._taint(a) for a in e.args):
+                self.syncs.append((e, "block_until_ready"))
+            return False
+        # -- producing forms ---------------------------------------------
+        arg_taint = any(self._taint(a) for a in e.args) or \
+            any(self._taint(kw.value) for kw in e.keywords)
+        if self.cls.call_returns_device(self.mod, e):
+            return True
+        if target and target in self.cls.fns:
+            return False                # in-repo, known host-returning
+        return arg_taint                # unknown callee: propagate
+
+
+# ---------------------------------------------------------------------------
+# the rule
+# ---------------------------------------------------------------------------
+@register_rule
+class SyncRule:
+    id = "R-SYNC"
+    name = "device-sync-in-span"
+    description = ("forcing a JAX value to host (np.asarray/.item()/"
+                   "float()/block_until_ready) in core/, search/, serve/ "
+                   "must happen inside a trace span (lexically, or via "
+                   "every callsite) so device time lands in the right "
+                   "phase")
+
+    def run(self, index: RepoIndex) -> List[Finding]:
+        cls = _Classifier(index)
+        out: List[Finding] = []
+        for mod in index.modules.values():
+            if not mod.relpath.startswith(SCOPE):
+                continue
+            for qual, fn in mod.functions.items():
+                for node, op in _TaintWalker(cls, mod, qual, fn).run():
+                    if mod.in_span_with(node):
+                        continue
+                    if self._caller_bracketed(index, mod, qual):
+                        continue
+                    out.append(Finding(
+                        rule=self.id, path=index.repo_rel(mod),
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"`{op}` forces a device value to host "
+                                 f"outside any trace span — device time "
+                                 f"escapes phase attribution; wrap it in "
+                                 f"`with current_tracer().span(...)` or "
+                                 f"bracket every callsite of {qual} in "
+                                 f"a span"),
+                        symbol=qual))
+        return out
+
+    @staticmethod
+    def _caller_bracketed(index: RepoIndex, mod: Module,
+                          qual: str) -> bool:
+        sites = index.callsites(f"{mod.dotted}.{qual}")
+        return bool(sites) and all(s.in_span for s in sites)

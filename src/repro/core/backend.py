@@ -116,7 +116,7 @@ def validity_mask(mappings: Sequence[Mapping]) -> np.ndarray:
     """Object-path wrapper over `validity_mask_arrays` (packs once)."""
     st = make_static(mappings[0].hardware, mappings[0].workload)
     factors, _, store = pack(mappings)
-    return validity_mask_arrays(st, np.asarray(factors), np.asarray(store))
+    return validity_mask_arrays(st, factors, store)
 
 
 def _as_arrays(mappings):
@@ -131,7 +131,7 @@ def _as_arrays(mappings):
                 mappings.store)
     st = make_static(mappings[0].hardware, mappings[0].workload)
     factors, rank, store = pack(mappings)
-    return (st, np.asarray(factors), np.asarray(rank), np.asarray(store))
+    return st, factors, rank, store
 
 
 def _pallas_scores_arrays(st: HwStatic, factors, rank, goal: str,

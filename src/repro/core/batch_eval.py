@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import current_tracer
 from .designer import HardwareDesc
 from .mapping import Mapping
 from .workload import TENSORS, Workload, N_, M_, C_, R_, S_, E_, F_
@@ -100,7 +101,12 @@ def make_static(hw: HardwareDesc, wl: Workload) -> HwStatic:
 
 
 def pack(mappings: Sequence[Mapping]):
-    """Mapping objects -> (factors, rank, store) int arrays."""
+    """Mapping objects -> (factors, rank, store) packed *host* arrays.
+
+    Returns numpy: every consumer either feeds a jit boundary (which
+    accepts numpy directly) or wants numpy for closed-form host math —
+    returning device arrays here forced a numpy->device->numpy
+    round-trip on the object path (flagged by trimlint R-SYNC)."""
     hw = mappings[0].hardware
     L = len(hw.tiling_levels)
     mem = hw.memory_level_indices()
@@ -118,7 +124,7 @@ def pack(mappings: Sequence[Mapping]):
         for j, li in enumerate(mem):
             for ti, t in enumerate(TENSORS):
                 store[b, j, ti] = m.stores(li, t) or li == 0
-    return jnp.asarray(factors), jnp.asarray(rank), jnp.asarray(store)
+    return factors, rank, store
 
 
 # ---------------------------------------------------------------------------
@@ -740,9 +746,14 @@ def batch_scores_arrays(st: HwStatic, factors, rank, store,
         rep = lambda a: jnp.concatenate(
             [a, jnp.repeat(a[:1], pad, axis=0)], axis=0)
         factors, rank, store = rep(factors), rep(rank), rep(store)
-    out = evaluate_batch(st, factors, rank, store)
-    key = {"latency": "cycles", "energy": "energy_pj", "edp": "edp"}[goal]
-    return np.asarray(out[key][:n]), np.asarray(out["valid"][:n])
+    # the np.asarray forces the async jit dispatch: bracket it in a span
+    # so device time is attributable even when no caller holds one open
+    # (trimlint R-SYNC — some callers, e.g. batch_scores, are bare)
+    with current_tracer().span("batch_eval.scores", rows=int(n)):
+        out = evaluate_batch(st, factors, rank, store)
+        key = {"latency": "cycles", "energy": "energy_pj",
+               "edp": "edp"}[goal]
+        return np.asarray(out[key][:n]), np.asarray(out["valid"][:n])
 
 
 def batch_scores(mappings, goal: str = "edp"):

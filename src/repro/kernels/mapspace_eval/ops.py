@@ -186,8 +186,7 @@ def pack_for_kernel(mappings: Sequence[Mapping], block: int = 256):
         assert all(not b for b in m.bypass), "kernel path is no-bypass only"
     st = make_static(mappings[0].hardware, mappings[0].workload)
     factors, rank, _ = pack(mappings)
-    return pack_for_kernel_arrays(st, np.asarray(factors),
-                                  np.asarray(rank), block)
+    return pack_for_kernel_arrays(st, factors, rank, block)
 
 
 def mapspace_eval_arrays(st: HwStatic, factors, rank, *, block: int = 256,

@@ -23,7 +23,8 @@ from .metrics import (NULL_METRICS, Counter, Gauge, Histogram, Metrics,
                       NullMetrics)
 from .progress import (EVENT_KINDS, CollectSink, ConsoleSink, ProgressEvent,
                        ProgressStream, as_stream)
-from .trace import (NULL_TRACER, NullTracer, Span, TraceBuffer, Tracer,
-                    activate, as_tracer, current_tracer, family_of)
+from .trace import (DRIVER_PHASES, NULL_TRACER, PHASES, NullTracer, Span,
+                    TraceBuffer, Tracer, activate, as_tracer,
+                    current_tracer, family_of)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

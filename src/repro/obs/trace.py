@@ -45,6 +45,19 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
+#: The driver's non-overlapping pipeline phases, in pipeline order.  This
+#: is the one canonical source for `phase=True` span names: `phase_times()`
+#: accounting, bench_obs coverage claims, and the R-TRACE static-analysis
+#: rule (docs/static-analysis.md) all key off it — a phase name used
+#: anywhere else must be added here first.
+DRIVER_PHASES = ("propose", "static-filter", "pack", "validate",
+                 "cache-get", "score", "cache-put", "assemble",
+                 "frontier-update")
+
+#: All phase-flagged span names repo-wide: the driver phases plus the
+#: serving engine's per-tick phase.
+PHASES = DRIVER_PHASES + ("serve.tick",)
+
 # ---------------------------------------------------------------------------
 # span records
 # ---------------------------------------------------------------------------

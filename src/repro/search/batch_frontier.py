@@ -82,8 +82,7 @@ def _job_arrays(job: MapspaceJob, need_eligibility: bool) -> _JobArrays:
     factors, rank, store = pack(job.mappings)
     elig = (eligibility_mask(job.mappings) if need_eligibility
             else np.zeros((len(job.mappings),), bool))
-    return _JobArrays(st, np.asarray(factors), np.asarray(rank),
-                      np.asarray(store), elig)
+    return _JobArrays(st, factors, rank, store, elig)
 
 
 def _chunk(idxs: List[int], sizes: Dict[int, int],

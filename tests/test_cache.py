@@ -1,0 +1,113 @@
+"""Cache-key schema coupling: the key *shape* is pinned, and every key
+component actually moves the key.
+
+`repro.analysis` (rule R-CACHE) derives the shape of the result-cache key
+from the AST of `search/cache.py` — which payload keys exist, and which
+dataclass fields feed each `_*_sig` — and pins a hash of that shape in
+`src/repro/analysis/cache_key_schema.json` next to the current
+`CACHE_FORMAT`.  These tests couple the pin to the test suite so a
+key-shape change cannot land silently:
+
+  * if you change what goes into `cache_key` (add/remove a payload key or
+    a signature field), `test_key_schema_is_pinned` fails — bump
+    `CACHE_FORMAT`, run `python -m repro.analysis --update-schema`, and
+    update EXPECTED_SCHEMA_HASH / EXPECTED_CACHE_FORMAT here *in the same
+    change*;
+  * editing the literals below without a `CACHE_FORMAT` bump still fails
+    the analyzer's own R-CACHE pin check (`python -m repro.analysis`).
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis import build_index
+from repro.analysis.rules.cache_key import (compute_key_schema, pin_path,
+                                            schema_hash)
+from repro.core import MapperConfig, Workload, make_spatial_arch
+from repro.search import cache as cache_mod
+from repro.search.cache import CACHE_FORMAT, cache_key
+from repro.search.constraints import Constraint, ConstraintSet
+
+REPO = Path(__file__).resolve().parents[1]
+
+# Changing either literal requires a CACHE_FORMAT bump in search/cache.py
+# and a re-pin via `python -m repro.analysis --update-schema` (see module
+# docstring).
+EXPECTED_CACHE_FORMAT = 4
+EXPECTED_SCHEMA_HASH = (
+    "2b6e5b259996253b67fbb8749458a2720e90f6d6f4ade8f8979c7afd1757615b")
+
+
+def test_key_schema_is_pinned():
+    index = build_index(REPO)
+    schema = compute_key_schema(index)
+    assert schema_hash(schema) == EXPECTED_SCHEMA_HASH, (
+        "cache-key shape changed: bump CACHE_FORMAT, re-pin with "
+        "`python -m repro.analysis --update-schema`, and update "
+        "EXPECTED_SCHEMA_HASH/EXPECTED_CACHE_FORMAT in this test")
+    assert CACHE_FORMAT == EXPECTED_CACHE_FORMAT
+
+
+def test_pin_file_matches_live_tree():
+    index = build_index(REPO)
+    pin = json.loads(pin_path(index).read_text())
+    assert pin["schema_hash"] == EXPECTED_SCHEMA_HASH
+    assert pin["cache_format"] == EXPECTED_CACHE_FORMAT == CACHE_FORMAT
+
+
+def _base_query():
+    wl = Workload(dims=(1, 4, 8, 3, 3, 8, 8))
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
+                           bits=16)
+    cfg = MapperConfig(max_mappings=50, seed=0)
+    return wl, hw, cfg
+
+
+def test_every_key_component_moves_the_key():
+    wl, hw, cfg = _base_query()
+    base = cache_key(wl, hw, cfg, "edp")
+    variants = {
+        "workload.dims": cache_key(
+            dataclasses.replace(wl, dims=(1, 4, 8, 3, 3, 8, 16)),
+            hw, cfg, "edp"),
+        "workload.input_zero_frac": cache_key(
+            dataclasses.replace(wl, input_zero_frac=0.25), hw, cfg, "edp"),
+        "hw": cache_key(
+            wl, make_spatial_arch(num_pes=64, rf_words=64,
+                                  gbuf_words=4096, bits=16), cfg, "edp"),
+        "hw.precision_bits": cache_key(
+            wl, make_spatial_arch(num_pes=16, rf_words=64,
+                                  gbuf_words=4096, bits=8), cfg, "edp"),
+        "cfg.max_mappings": cache_key(
+            wl, hw, dataclasses.replace(cfg, max_mappings=51), "edp"),
+        "cfg.seed": cache_key(
+            wl, hw, dataclasses.replace(cfg, seed=1), "edp"),
+        "goal": cache_key(wl, hw, cfg, "latency"),
+        "scorer": cache_key(wl, hw, cfg, "edp", scorer="fused"),
+        "backend": cache_key(wl, hw, cfg, "edp", backend="pallas"),
+        "mapspace": cache_key(wl, hw, cfg, "edp", mapspace="deadbeef"),
+        "constraints": cache_key(
+            wl, hw, cfg, "edp",
+            constraints=ConstraintSet(
+                [Constraint("energy_pj", 1e9)]).digest()),
+    }
+    for name, key in variants.items():
+        assert key != base, f"changing {name} did not change the cache key"
+    assert len({base, *variants.values()}) == 1 + len(variants), (
+        "distinct queries collided")
+
+
+def test_cache_format_bump_changes_key(monkeypatch):
+    wl, hw, cfg = _base_query()
+    base = cache_key(wl, hw, cfg, "edp")
+    monkeypatch.setattr(cache_mod, "CACHE_FORMAT", CACHE_FORMAT + 1)
+    assert cache_key(wl, hw, cfg, "edp") != base
+
+
+def test_hw_name_is_cosmetic():
+    # Identically-parameterized designs share cache entries; `name` is
+    # exempt by design (see EXEMPT in repro.analysis.rules.cache_key).
+    wl, hw, cfg = _base_query()
+    renamed = dataclasses.replace(hw, name="other")
+    assert cache_key(wl, hw, cfg, "edp") == cache_key(wl, renamed, cfg,
+                                                      "edp")
