@@ -82,6 +82,27 @@ def run(max_mappings=2000):
               pal_s <= jnp_s,
               f"{res['jnp_us']:.2f}us -> {res['pallas_us']:.2f}us "
               f"per mapping ({res['pallas_speedup']:.2f}x)")
+        # multi-device TPU hosts: the fused kernel path shards whole
+        # jobs across local devices (search/batch_frontier) — assert the
+        # plan covers every job and engages when the rows justify it
+        import jax
+
+        from repro.core.batch_eval import SHARD_MIN_ROWS
+        from repro.search.batch_frontier import _kernel_shard_plan
+        devs = jax.local_devices()
+        n_jobs, rows = 4, len(nb)
+        plan = _kernel_shard_plan(list(range(n_jobs)), [rows] * n_jobs,
+                                  devices=devs)
+        covered = sorted(i for idxs, _ in plan for i in idxs) \
+            == list(range(n_jobs))
+        shardable = len(devs) > 1 and n_jobs * rows >= 2 * SHARD_MIN_ROWS
+        res["n_devices"] = len(devs)
+        res["kernel_shards"] = len(plan)
+        claim(res, "kernel shard plan covers every job and engages on "
+              "multi-device hosts",
+              covered and (len(plan) > 1 if shardable else len(plan) == 1),
+              f"devices={len(devs)} shards={len(plan)} "
+              f"rows={n_jobs * rows}")
     else:
         # interpret mode is the correctness regime: record, don't race
         claim(res, "interpret-mode pallas path exercised end-to-end "

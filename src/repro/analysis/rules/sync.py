@@ -23,6 +23,23 @@ fine):
     lexically inside a ``with *.span(...)`` block, or when every in-repo
     callsite of its enclosing function does (caller-bracket: the span
     that launched the work brackets the helper that forces it).
+
+The streaming pipeline adds one *legitimate* deferred-sync shape: a
+function marked ``@repro.obs.deferred_sync`` dispatches device work and
+returns the un-forced values on purpose (the force happens later, in a
+"device-wait" span).  The decorator is a contract, not an exemption —
+this rule enforces both sides of it:
+
+  * a deferred producer is pinned device-returning (it can never be
+    classified a barrier, whatever its return shape looks like), so the
+    ordinary sync-site check still covers whoever eventually forces its
+    results;
+  * every in-scope callsite of a deferred producer must itself sit in a
+    trace span (lexically, or via the caller-bracket rule) — the span
+    that *launches* deferred work owns its dispatch/compile time;
+  * decorating a function that never produces device values is flagged:
+    a rotted marker would quietly disable barrier analysis on an
+    ordinary host helper.
 """
 from __future__ import annotations
 
@@ -41,6 +58,7 @@ DEVICE_EXACT = {"jax.jit", "jax.vmap", "jax.pmap", "jax.device_put",
 SYNC_CALLS = {"numpy.asarray", "numpy.array"}
 SYNC_BUILTINS = {"float", "int", "bool"}
 SYNC_METHODS = {"item", "block_until_ready", "tolist", "__array__"}
+DEFERRED_MARKS = {"repro.obs.deferred_sync", "repro.obs.trace.deferred_sync"}
 
 
 def _is_device_target(dotted: Optional[str]) -> bool:
@@ -80,8 +98,26 @@ class _Classifier:
                        for d in self.fns}
         self.callees = {d: self._repo_callees(*self.fns[d])
                         for d in self.fns}
-        self.ret_dev: Dict[str, bool] = {d: False for d in self.fns}
+        # deferred-sync producers (@repro.obs.deferred_sync): pinned
+        # device-returning — they hand back un-forced values by design,
+        # so the barrier check must never launder them to host
+        self.deferred: Set[str] = {
+            d for d, (mod, fn) in self.fns.items()
+            if self._is_deferred(mod, fn)}
+        self.ret_dev: Dict[str, bool] = {d: d in self.deferred
+                                         for d in self.fns}
         self._fixpoint()
+
+    def _is_deferred(self, mod: Module, fn: ast.AST) -> bool:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        for dec in fn.decorator_list:
+            target = self.index.resolve_call(mod, dec) if \
+                isinstance(dec, ast.Call) else \
+                self.index.resolve_name(mod, dec)
+            if target in DEFERRED_MARKS:
+                return True
+        return False
 
     def _find_device_names(self) -> None:
         for mod in self.index.modules.values():
@@ -379,6 +415,46 @@ class SyncRule:
                                  f"bracket every callsite of {qual} in "
                                  f"a span"),
                         symbol=qual))
+        out.extend(self._deferred_contract(index, cls))
+        return out
+
+    def _deferred_contract(self, index: RepoIndex,
+                           cls: _Classifier) -> List[Finding]:
+        """Both sides of the @deferred_sync contract: the marker only on
+        genuine device producers, and every in-scope launch site inside
+        a span (the launching span owns dispatch/compile time)."""
+        out: List[Finding] = []
+        for d in sorted(cls.deferred):
+            mod, fn = cls.fns[d]
+            name = d[len(mod.dotted) + 1:]
+            produces = cls.direct[d] or any(
+                cls.ret_dev[c] for c in cls.callees[d] - {d})
+            if not produces:
+                out.append(Finding(
+                    rule=self.id, path=index.repo_rel(mod),
+                    line=fn.lineno, col=fn.col_offset,
+                    message=(f"@deferred_sync on {name} but nothing in "
+                             f"it (or its callees) produces device "
+                             f"values — a stale marker disables barrier "
+                             f"analysis on a host helper; drop it"),
+                    symbol=name))
+            for site in index.callsites(d):
+                if not site.module.relpath.startswith(SCOPE):
+                    continue
+                if site.in_span:
+                    continue
+                if site.caller is not None and self._caller_bracketed(
+                        index, site.module, site.caller):
+                    continue
+                out.append(Finding(
+                    rule=self.id, path=index.repo_rel(site.module),
+                    line=site.node.lineno, col=site.node.col_offset,
+                    message=(f"call to deferred-sync producer {name} "
+                             f"outside any trace span — the launching "
+                             f"span must own the dispatch/compile time "
+                             f"it defers; wrap the call in `with "
+                             f"current_tracer().span(...)`"),
+                    symbol=site.caller or ""))
         return out
 
     @staticmethod

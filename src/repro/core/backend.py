@@ -66,6 +66,18 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def device_scope(device=None):
+    """Context manager pinning uncommitted dispatches (jnp or kernel) to
+    `device` — the per-shard scope of the multi-device fused path.  None
+    is a no-op scope, so a single-device shard plan runs the exact
+    historical dispatch."""
+    import contextlib
+    if device is None:
+        return contextlib.nullcontext()
+    import jax
+    return jax.default_device(device)
+
+
 def pallas_eligible(mapping: Mapping) -> bool:
     """The kernel assumes full storage chains: no tensor bypasses any
     memory level."""

@@ -430,6 +430,83 @@ bucket = _bucket
 
 
 # ---------------------------------------------------------------------------
+# Multi-device sharding + jit-dispatch visibility.
+#
+# Fused groups are row-wise independent (every output row depends only on
+# its own factors/rank/store/params row), so a giant BatchSig group can be
+# split along the mapping axis into one contiguous shard per local device,
+# each padded to its own power-of-2 bucket, and the host merge concatenates
+# per-shard results — bit-identical to the single-call path.  The registry
+# below mirrors jit's compile cache per (sig, bucket, device) so recompile
+# churn from sharding/bucketing is observable (`summary()['jit']`) instead
+# of guessed.
+# ---------------------------------------------------------------------------
+SHARD_MIN_ROWS = 4096   # below this, sharding overhead beats the win
+
+
+def shard_bounds(n: int, k: int,
+                 min_rows: int = SHARD_MIN_ROWS) -> List[Tuple[int, int]]:
+    """Split `n` rows into at most `k` contiguous (lo, hi) shards of
+    near-equal size, never creating a shard smaller than `min_rows`
+    (small groups stay whole — per-device dispatch overhead and the
+    extra per-device compile would dominate).  Always returns at least
+    one shard covering [0, n)."""
+    if n <= 0:
+        return [(0, max(n, 0))]
+    k = max(1, min(k, n // max(1, min_rows)))
+    if k <= 1:
+        return [(0, n)]
+    base, extra = divmod(n, k)
+    bounds: List[Tuple[int, int]] = []
+    lo = 0
+    for i in range(k):
+        hi = lo + base + (1 if i < extra else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def score_devices() -> Tuple:
+    """Local devices available to the fused scorer, in jax order."""
+    return tuple(jax.local_devices())
+
+
+# (BatchSig-structural-key, bucket_rows, device) combos dispatched so far
+# in this process — a host-side mirror of jit's executable cache, reset
+# alongside `jax.clear_caches()` via `reset_jit_registry()`.
+_JIT_SEEN: set = set()
+
+
+def _sig_tag(sig) -> str:
+    """Short stable label for a BatchSig, used in per-sig counter names:
+    levels/memory/routing counts plus depthwise/weight flags."""
+    return (f"L{sig.n_levels}m{len(sig.mem_idx)}r{len(sig.rout_idx)}"
+            f"{'dw' if sig.depthwise else ''}"
+            f"{'w' if sig.has_weight else ''}")
+
+
+def note_batch_dispatch(sig, bucket_rows: int, device=None) -> None:
+    """Record one fused-batch dispatch into the ambient tracer's metrics:
+    `jit.dispatches`, the `jit.bucket_rows` histogram, and — when this
+    (sig, bucket, device) combo is new to the process, i.e. jit will
+    compile — `jit.compiles` plus a per-BatchSig compile counter."""
+    m = current_tracer().metrics
+    m.counter("jit.dispatches").inc()
+    m.histogram("jit.bucket_rows").observe(float(bucket_rows))
+    combo = (sig, int(bucket_rows), None if device is None else str(device))
+    if combo not in _JIT_SEEN:
+        _JIT_SEEN.add(combo)
+        m.counter("jit.compiles").inc()
+        m.counter(f"jit.compiles[{_sig_tag(sig)}]").inc()
+
+
+def reset_jit_registry() -> None:
+    """Forget seen (sig, bucket, device) combos — call alongside
+    `jax.clear_caches()` so compile counters track reality."""
+    _JIT_SEEN.clear()
+
+
+# ---------------------------------------------------------------------------
 # Multi-architecture fused batches (repro.search.batch_frontier).
 #
 # `evaluate_batch` bakes every hardware constant into the jit closure via the

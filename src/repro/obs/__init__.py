@@ -25,6 +25,6 @@ from .progress import (EVENT_KINDS, CollectSink, ConsoleSink, ProgressEvent,
                        ProgressStream, as_stream)
 from .trace import (DRIVER_PHASES, NULL_TRACER, PHASES, NullTracer, Span,
                     TraceBuffer, Tracer, activate, as_tracer,
-                    current_tracer, family_of)
+                    current_tracer, deferred_sync, family_of)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -31,9 +31,13 @@ Design rules (ISSUE: zero-overhead-when-off, never inside jit):
 
 Spans flagged `phase=True` are the driver's non-overlapping pipeline
 phases (propose / static-filter / pack / validate / score / cache-* /
-assemble / frontier-update); `phase_times()` sums exactly those, so
+assemble / frontier-update, plus the streaming driver's prefetch-build /
+device-wait / cache-flush); `phase_times()` sums exactly those, so
 nested detail spans (kernel groups, per-lookup cache gets) never double
-count.
+count.  Phase spans never nest inside each other *on one thread*; the
+streaming driver's builder thread legitimately holds pack/validate spans
+while the main thread sits in device-wait, so summed phase time may
+exceed wall time exactly when host and device genuinely overlapped.
 """
 from __future__ import annotations
 
@@ -51,8 +55,9 @@ from typing import Any, Dict, List, Optional
 #: rule (docs/static-analysis.md) all key off it — a phase name used
 #: anywhere else must be added here first.
 DRIVER_PHASES = ("propose", "static-filter", "pack", "validate",
-                 "cache-get", "score", "cache-put", "assemble",
-                 "frontier-update")
+                 "cache-get", "prefetch-build", "score", "device-wait",
+                 "cache-put", "assemble", "frontier-update",
+                 "cache-flush")
 
 #: All phase-flagged span names repo-wide: the driver phases plus the
 #: serving engine's per-tick phase.
@@ -372,6 +377,30 @@ def activate(tracer) -> _Activation:
             run_search(...)             # library spans land in tr
     """
     return _Activation(tracer)
+
+
+def deferred_sync(fn):
+    """Mark `fn` as a *deferred-sync producer*: it deliberately returns
+    un-forced JAX device values (async dispatch already issued) so a
+    later consumer can overlap host work with device execution before
+    forcing the results.
+
+    The decorator is a runtime identity — it exists for the contract,
+    which trimlint R-SYNC enforces statically:
+
+      * every in-repo callsite of a `@deferred_sync` function must sit
+        inside a trace span (the launch must be phase-attributed, just
+        like a forcing sync must be);
+      * the decorator may only mark functions that actually produce
+        device values (a host-only `@deferred_sync` function is a
+        finding, so the annotation cannot rot).
+
+    The forcing side stays covered by the ordinary R-SYNC sync-site
+    check: whoever converts the pending values to numpy must do so
+    inside a span (the streaming driver's "device-wait" phase).
+    """
+    fn.__deferred_sync__ = True
+    return fn
 
 
 def as_tracer(trace) -> object:

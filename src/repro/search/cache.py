@@ -19,13 +19,16 @@ independent of code layout; mappings are rebuilt against the live
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
+import queue
 import tempfile
+import threading
 from collections import OrderedDict
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 from ..core.designer import HardwareDesc
 from ..core.evaluator import Estimate
@@ -134,6 +137,61 @@ def decode_result(entry: Dict[str, Any], wl: Workload, hw: HardwareDesc):
 
 
 # ---------------------------------------------------------------------------
+# async disk writeback
+# ---------------------------------------------------------------------------
+class AsyncCacheWriter:
+    """Bounded background writer for a `ResultCache`'s disk tier.
+
+    The streaming driver keeps cache `put`s off the round critical path:
+    the memory tier and `CacheStats` update synchronously on the calling
+    thread (counters stay deterministic), while the JSON-file write —
+    mkstemp + `os.replace`, plus the GC cadence check — runs on this
+    single background thread.  The queue is bounded, so a slow disk
+    applies backpressure instead of growing unboundedly.
+
+    `close()` drains every queued put before returning (flush-on-exit):
+    a run that raises mid-round still lands all completed puts, which the
+    driver guarantees by closing the writer in a ``finally`` under the
+    "cache-flush" phase span.  Disk errors never kill the run — they are
+    recorded per item and surfaced via `errors`.  GC stays cross-process
+    safe: the sweep runs on this thread under the same O_EXCL lockfile.
+    """
+
+    def __init__(self, cache: "ResultCache", max_queue: int = 256):
+        self._cache = cache
+        self._q: "queue.Queue[Optional[tuple]]" = queue.Queue(
+            maxsize=max(1, max_queue))
+        self.errors: List[BaseException] = []
+        self.n_written = 0
+        self._thread = threading.Thread(
+            target=self._loop, name="repro-cache-writer", daemon=True)
+        self._thread.start()
+
+    def submit(self, key: str, blob: str) -> None:
+        """Enqueue one disk write; blocks (backpressure) when full."""
+        self._q.put((key, blob))
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            key, blob = item
+            try:
+                self._cache._disk_put(key, blob)
+                self.n_written += 1
+            except BaseException as exc:      # disk full / perms: record,
+                self.errors.append(exc)       # never kill the search
+
+
+    def close(self) -> int:
+        """Drain every queued put, stop the thread; -> writes landed."""
+        self._q.put(None)
+        self._thread.join()
+        return self.n_written
+
+
+# ---------------------------------------------------------------------------
 # the two-tier store
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -191,6 +249,12 @@ class ResultCache:
         self._est_bytes = 0
         self._mem: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self.stats = CacheStats()
+        # one reentrant lock guards the memory tier, the stats counters
+        # and the disk-size estimates: the streaming driver reads the
+        # cache from its builder thread while an AsyncCacheWriter lands
+        # disk puts on a third
+        self._lock = threading.RLock()
+        self._writer: Optional[AsyncCacheWriter] = None
         if path:
             os.makedirs(path, exist_ok=True)
 
@@ -198,11 +262,12 @@ class ResultCache:
         return os.path.join(self.path, f"{key}.json")
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
-        entry = self._mem.get(key)
-        if entry is not None:
-            self._mem.move_to_end(key)
-            self.stats.hits_memory += 1
-            return entry
+        with self._lock:
+            entry = self._mem.get(key)
+            if entry is not None:
+                self._mem.move_to_end(key)
+                self.stats.hits_memory += 1
+                return entry
         if self.path:
             try:
                 with open(self._file(key)) as f:
@@ -210,38 +275,89 @@ class ResultCache:
             except (FileNotFoundError, json.JSONDecodeError):
                 entry = None
             if entry is not None and entry.get("v") == CACHE_FORMAT:
-                self.stats.hits_disk += 1
-                self._remember(key, entry)
+                with self._lock:
+                    self.stats.hits_disk += 1
+                    self._remember(key, entry)
                 return entry
-        self.stats.misses += 1
+        with self._lock:
+            self.stats.misses += 1
         return None
 
     def put(self, key: str, entry: Dict[str, Any]) -> None:
-        self.stats.puts += 1
-        self._remember(key, entry)
+        # memory tier + counters update synchronously on the calling
+        # thread (deterministic stats); the disk write goes through the
+        # background writer when one is active
+        with self._lock:
+            self.stats.puts += 1
+            self._remember(key, entry)
         if self.path:
-            # atomic-ish: write sidecar then rename, so concurrent readers
-            # never observe a torn file
             blob = json.dumps(entry)
-            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w") as f:
-                    f.write(blob)
-                os.replace(tmp, self._file(key))
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
+            if self._writer is not None:
+                self._writer.submit(key, blob)
+            else:
+                self._disk_put(key, blob)
+
+    def _disk_put(self, key: str, blob: str) -> None:
+        # atomic-ish: write sidecar then rename, so concurrent readers
+        # never observe a torn file
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, self._file(key))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        with self._lock:
             if self._est_entries is not None:
                 # overwrites over-count by one entry; corrected at the
                 # next real scan
                 self._est_entries += 1
                 self._est_bytes += len(blob)
             self._puts_since_gc += 1
-            if self._puts_since_gc >= self.gc_every:
+            run_gc = self._puts_since_gc >= self.gc_every
+            if run_gc:
                 self._puts_since_gc = 0
-                if self._est_entries is None or self._over_bounds():
-                    self.gc()
+                run_gc = self._est_entries is None or self._over_bounds()
+        if run_gc:
+            self.gc()
+
+    # -- async writeback -------------------------------------------------
+    def start_async_writes(self, max_queue: int = 256) \
+            -> Optional[AsyncCacheWriter]:
+        """Route subsequent disk puts through a bounded background
+        writer (no-op without a disk tier).  Memory-tier behaviour and
+        stats are unchanged; pair with `stop_async_writes()`."""
+        if not self.path or self._writer is not None:
+            return self._writer
+        self._writer = AsyncCacheWriter(self, max_queue=max_queue)
+        return self._writer
+
+    def stop_async_writes(self) -> int:
+        """Drain every queued put and return to synchronous writes;
+        -> number of disk writes the background writer landed."""
+        writer, self._writer = self._writer, None
+        if writer is None:
+            return 0
+        self._last_writer = writer
+        return writer.close()
+
+    @contextlib.contextmanager
+    def async_writes(self, max_queue: int = 256):
+        """`with cache.async_writes():` — async writeback scoped to the
+        block, drained on exit even when the body raises."""
+        writer = self.start_async_writes(max_queue=max_queue)
+        try:
+            yield writer
+        finally:
+            self.stop_async_writes()
+
+    @property
+    def writer_errors(self) -> List[BaseException]:
+        """Disk errors recorded by the current or most recent writer."""
+        writer = self._writer or getattr(self, "_last_writer", None)
+        return list(writer.errors) if writer is not None else []
 
     def _over_bounds(self) -> bool:
         return ((self.max_disk_entries is not None
@@ -377,9 +493,10 @@ class ResultCache:
             evicted += 1
             over_n -= 1
             total -= size
-        self._est_entries = len(files) - evicted
-        self._est_bytes = total
-        self.stats.disk_evictions += evicted
+        with self._lock:
+            self._est_entries = len(files) - evicted
+            self._est_bytes = total
+            self.stats.disk_evictions += evicted
         return evicted
 
     def _remember(self, key: str, entry: Dict[str, Any]) -> None:
@@ -389,7 +506,9 @@ class ResultCache:
             self._mem.popitem(last=False)
 
     def clear_memory(self) -> None:
-        self._mem.clear()
+        with self._lock:
+            self._mem.clear()
 
     def __len__(self) -> int:
-        return len(self._mem)
+        with self._lock:
+            return len(self._mem)

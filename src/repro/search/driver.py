@@ -34,7 +34,8 @@ from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..core.workload import TENSORS
 from ..obs import (MANIFEST_DIR, ConsoleSink, ProgressStream, activate,
                    as_stream, as_tracer, build_manifest)
-from .batch_frontier import MapspaceJob, fused_best, per_arch_best
+from .batch_frontier import (MapspaceJob, fused_best, fused_collect,
+                             fused_launch, per_arch_best)
 from .cache import ResultCache, cache_key, decode_result, encode_result
 from .constraints import ConstraintSet
 from .pareto import (DEFAULT_OBJECTIVES, ParetoFront, hypervolume,
@@ -70,6 +71,7 @@ class SearchReport:
     pareto: ParetoFront
     history: List[Dict[str, Any]]        # one row per *fresh* evaluation
     backend: str = "jnp"                 # resolved scoring engine
+    overlap: bool = False                # streaming pipeline actually used
     constraints: Optional[ConstraintSet] = None
     n_evaluated: int = 0                 # distinct architectures evaluated
     n_revisits: int = 0                  # strategy re-proposals served free
@@ -139,9 +141,13 @@ class SearchReport:
         return out
 
     def summary(self) -> Dict[str, Any]:
+        snap = (self.tracer.metrics.snapshot()
+                if self.tracer is not None
+                and getattr(self.tracer, "enabled", False) else None)
         return {
             "goal": self.goal, "strategy": self.strategy,
             "backend": self.backend,
+            "overlap": self.overlap,
             "constraints": str(self.constraints) if self.constraints
             else None,
             "budget": self.budget, "space_size": self.space_size,
@@ -162,10 +168,17 @@ class SearchReport:
             # seconds by driver phase (empty without an active tracer);
             # matches the phase-flagged spans of the exported trace
             "phase_times": self.phase_times,
-            "metrics": (self.tracer.metrics.snapshot()
-                        if self.tracer is not None
-                        and getattr(self.tracer, "enabled", False)
-                        else None),
+            "metrics": snap,
+            # jit-compile visibility: per-BatchSig compile counters and
+            # the bucket-size histogram (`batch_eval.note_batch_dispatch`)
+            "jit": ({"counters": {k: v
+                                  for k, v in snap["counters"].items()
+                                  if k.startswith("jit.")},
+                     "histograms": {k: v
+                                    for k, v in
+                                    snap["histograms"].items()
+                                    if k.startswith("jit.")}}
+                    if snap is not None else None),
             "pareto_size": len(self.pareto),
             "pareto": self.pareto.summary(),
             # steps before the first feasible evaluation are +inf in
@@ -176,9 +189,41 @@ class SearchReport:
         }
 
 
+@dataclasses.dataclass
+class _RoundPlan:
+    """Everything `_Evaluator.prepare` derives from one round's fresh
+    coordinates.  The streaming driver builds plans on a worker thread,
+    so a plan carries its own counters and deferred progress events —
+    the worker never touches the evaluator/report; the main thread folds
+    a plan in via `absorb` (keeping counter updates and event order
+    identical to the sequential path)."""
+    batch: List[Coords]
+    decoded: Dict[Tuple[Coords, str], WorkloadResult]
+    keymaps: Dict[Coords, List[str]]
+    jobs: List[MapspaceJob]
+    meta: Dict[Tuple[Coords, str], Tuple[int, int]]
+    skipped: Dict[Coords, "SkippedArch"]
+    survivors: List[Tuple[Coords, Any]]
+    # deferred "cache-lookup" progress events (kwargs per emit), flushed
+    # by `absorb` in consult order
+    events: List[Dict[str, Any]]
+    n_enumerations: int = 0
+    n_packed_builds: int = 0
+    n_rows: int = 0                      # rows this plan sends to a scorer
+    n_archs_scored: int = 0              # architectures those rows cover
+
+
 class _Evaluator:
     """Evaluates batches of lattice coordinates into ArchResults, with
-    cache consult and (optionally) cross-arch fused scoring."""
+    cache consult and (optionally) cross-arch fused scoring.
+
+    The round is staged — prepare (host build + cache consult) / absorb
+    (fold plan counters + emit deferred events) / score (device) /
+    finalize (winner materialization, cache put, network assembly) — so
+    the streaming driver can run `prepare` for round k+1 on a worker
+    thread while round k's dispatches execute.  `__call__` composes the
+    stages sequentially and is bit-identical to the pre-split evaluator.
+    """
 
     def __init__(self, space: ArchSpace, workloads: TaskWorkloads,
                  cfg: MapperConfig, goal: str, cache_level: str,
@@ -227,7 +272,8 @@ class _Evaluator:
             "disk_evictions": s.disk_evictions - s0.disk_evictions,
         }
 
-    def _mapspace_and_key(self, coords: Coords, hw, wl, memo: Dict):
+    def _mapspace_and_key(self, coords: Coords, hw, wl, memo: Dict,
+                          plan: _RoundPlan):
         """-> (packed_or_none, key).  The packed pipeline builds the
         arrays first (cheap, vectorized) and keys the cache on their
         content digest; the legacy pipeline keys on config alone."""
@@ -236,7 +282,7 @@ class _Evaluator:
             return memo[wk]
         if self.packed:
             pm = build_packed_mapspace(wl, hw, self.cfg)
-            self.report.n_packed_builds += 1
+            plan.n_packed_builds += 1
             k = cache_key(wl, hw, self.cfg, self.goal,
                           scorer=self.batching, backend=self.backend,
                           mapspace=pm.digest(),
@@ -249,18 +295,22 @@ class _Evaluator:
         memo[wk] = (pm, k)
         return pm, k
 
-    def __call__(self, batch: Sequence[Coords]) \
-            -> Dict[Coords, Union[ArchResult, SkippedArch]]:
+    def prepare(self, batch: Sequence[Coords]) -> _RoundPlan:
+        """Host side of a round: static filter, mapspace build/pack,
+        cache consult.  Touches only the plan (thread-safe against a
+        main thread finalizing the previous round) — progress events are
+        deferred into `plan.events` and counters stay plan-local until
+        `absorb`."""
         tr = self.tracer
+        plan = _RoundPlan(batch=list(batch), decoded={}, keymaps={},
+                          jobs=[], meta={}, skipped={}, survivors=[],
+                          events=[])
+        decoded, keymaps = plan.decoded, plan.keymaps
+        jobs, meta = plan.jobs, plan.meta
+        skipped, survivors = plan.skipped, plan.survivors
+        ms_memo: Dict[object, Tuple[object, str]] = {}
         # pass 1a: static constraint filter on the hardware description
         # alone — rejected designs never build, pack, or score a mapspace
-        decoded: Dict[Tuple[Coords, str], WorkloadResult] = {}
-        keymaps: Dict[Coords, List[str]] = {}
-        jobs: List[MapspaceJob] = []
-        meta: Dict[Tuple[Coords, str], Tuple[int, int]] = {}
-        ms_memo: Dict[object, Tuple[object, str]] = {}
-        skipped: Dict[Coords, SkippedArch] = {}
-        survivors: List[Tuple[Coords, Any]] = []
         with tr.span("static-filter", phase=True, archs=len(batch)) as sp:
             for coords in batch:
                 hw = self.space.at(coords)
@@ -278,7 +328,8 @@ class _Evaluator:
         for coords, hw in survivors:
             keys: List[str] = []
             for wl in self.workloads.intra:
-                pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo)
+                pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo,
+                                               plan)
                 keys.append(k)
                 tag = (coords, k)
                 if tag in decoded or tag in meta:
@@ -290,13 +341,13 @@ class _Evaluator:
                         cs.set(hit=True)
                 if entry is not None:
                     if self.stream.active:
-                        self.stream.emit("cache-lookup", hit=True,
-                                         arch=hw.name, workload=wl.name)
+                        plan.events.append(dict(hit=True, arch=hw.name,
+                                                workload=wl.name))
                     continue
                 if self.stream.active:
-                    self.stream.emit("cache-lookup", hit=False,
-                                     arch=hw.name, workload=wl.name)
-                self.report.n_enumerations += 1
+                    plan.events.append(dict(hit=False, arch=hw.name,
+                                            workload=wl.name))
+                plan.n_enumerations += 1
                 if pm is not None:
                     if not len(pm):
                         raise RuntimeError(
@@ -316,25 +367,75 @@ class _Evaluator:
                     meta[tag] = (space_.total_candidates, space_.n_valid)
             keymaps[coords] = keys
 
-        # pass 2: score all pending mapspaces (fused across architectures,
-        # or per-job with seed semantics)
+        plan.n_rows = sum(j.n_rows() for j in jobs)
+        # only architectures that actually contributed jobs — counting
+        # fully-cache-served archs would skew mean rows/arch low and
+        # inflate the auto round size
+        plan.n_archs_scored = len({j.tag[0] for j in jobs})
+        return plan
+
+    def absorb(self, plan: _RoundPlan) -> None:
+        """Fold a plan's counters into the report and flush its deferred
+        progress events (main thread only — the one writer of report and
+        evaluator state)."""
+        for kw in plan.events:
+            self.stream.emit("cache-lookup", **kw)
+        plan.events = []
+        self.report.n_enumerations += plan.n_enumerations
+        self.report.n_packed_builds += plan.n_packed_builds
+        if plan.jobs:
+            self.tracer.metrics.counter("search.rows_scored") \
+                .inc(plan.n_rows)
+            self.rows_scored += plan.n_rows
+            self.archs_scored += plan.n_archs_scored
+
+    def score_sync(self, plan: _RoundPlan) -> List[Any]:
+        """Pass 2, synchronous: score all pending mapspaces (fused
+        across architectures, or per-job with seed semantics)."""
+        if not plan.jobs:
+            return []
+        jobs = plan.jobs
+        with self.tracer.span("score", phase=True, jobs=len(jobs),
+                              rows=plan.n_rows, scorer=self.batching,
+                              backend=self.backend):
+            if self.batching == "fused":
+                bests = fused_best(jobs, self.goal, backend=self.backend)
+            else:
+                bests = per_arch_best(jobs, self.goal, self.use_batch,
+                                      backend=self.backend)
+        return bests
+
+    def launch(self, plan: _RoundPlan):
+        """Pass 2, streaming: issue every fused dispatch of the round
+        without forcing (the host is free to build the next round while
+        the device works).  The "score" span holds the host-side prep +
+        dispatch (and any compile) time; the force lands in `collect`'s
+        "device-wait" span."""
+        if not plan.jobs:
+            return None
+        with self.tracer.span("score", phase=True, jobs=len(plan.jobs),
+                              rows=plan.n_rows, scorer=self.batching,
+                              backend=self.backend, deferred=True):
+            pending = fused_launch(plan.jobs, self.goal,
+                                   backend=self.backend)
+        return pending
+
+    def collect(self, plan: _RoundPlan, pending) -> List[Any]:
+        """Force the round's in-flight device values -> JobBest list."""
+        if pending is None:
+            return []
+        with self.tracer.span("device-wait", phase=True,
+                              jobs=len(plan.jobs), rows=plan.n_rows):
+            return fused_collect(pending)
+
+    def finalize(self, plan: _RoundPlan, bests: List[Any]) \
+            -> Dict[Coords, Union[ArchResult, SkippedArch]]:
+        """Pass 3: winner materialization + cache put, then
+        network-level assembly per architecture (Algorithm 1 lines
+        12-14; mirrors core.explorer.evaluate_architecture)."""
+        tr = self.tracer
+        decoded, jobs, meta = plan.decoded, plan.jobs, plan.meta
         if jobs:
-            n_rows = sum(j.n_rows() for j in jobs)
-            with tr.span("score", phase=True, jobs=len(jobs),
-                         rows=n_rows, scorer=self.batching,
-                         backend=self.backend):
-                if self.batching == "fused":
-                    bests = fused_best(jobs, self.goal,
-                                       backend=self.backend)
-                else:
-                    bests = per_arch_best(jobs, self.goal, self.use_batch,
-                                          backend=self.backend)
-            tr.metrics.counter("search.rows_scored").inc(n_rows)
-            self.rows_scored += n_rows
-            # only architectures that actually contributed jobs — counting
-            # fully-cache-served archs would skew mean rows/arch low and
-            # inflate the auto round size
-            self.archs_scored += len({j.tag[0] for j in jobs})
             with tr.span("cache-put", phase=True, jobs=len(jobs)):
                 for job, b in zip(jobs, bests):
                     # winner-only materialization: the packed pipeline
@@ -350,16 +451,15 @@ class _Evaluator:
                     decoded[job.tag] = r
                     self.cache.put(job.tag[1], encode_result(r))
 
-        # pass 3: network-level assembly per architecture (Algorithm 1
-        # lines 12-14; mirrors core.explorer.evaluate_architecture)
         out: Dict[Coords, ArchResult] = {}
-        out.update(skipped)
-        with tr.span("assemble", phase=True, archs=len(survivors)):
-            for coords, hw in survivors:
+        out.update(plan.skipped)
+        with tr.span("assemble", phase=True,
+                     archs=len(plan.survivors)):
+            for coords, hw in plan.survivors:
                 results = [
                     dataclasses.replace(decoded[(coords, k)], workload=wl)
                     for wl, k in zip(self.workloads.intra,
-                                     keymaps[coords])]
+                                     plan.keymaps[coords])]
                 max_buf = 0.0
                 for r in results:
                     for li in hw.memory_level_indices():
@@ -377,23 +477,41 @@ class _Evaluator:
         self.sync_cache_counters()
         return out
 
+    def __call__(self, batch: Sequence[Coords]) \
+            -> Dict[Coords, Union[ArchResult, SkippedArch]]:
+        plan = self.prepare(batch)
+        self.absorb(plan)
+        return self.finalize(plan, self.score_sync(plan))
+
 
 TARGET_FUSED_ROWS = 65536       # rows one auto-sized round aims to fuse
 AUTO_ROUND_MIN = 2
 AUTO_ROUND_MAX = 64
 
 
-def auto_round_size(mean_rows_per_arch: float) -> Optional[int]:
+def auto_round_size(mean_rows_per_arch: float,
+                    n_devices: Optional[int] = None) -> Optional[int]:
     """`round_size="auto"`: fuse bigger rounds when mapspaces are small
     (per-round overhead amortizes over more architectures) and smaller
     rounds when they are large (bounds the fused batch so XLA's
     power-of-2 bucketing doesn't thrash the compile cache).  Returns
-    None when there is no signal yet (all cache hits)."""
+    None when there is no signal yet (all cache hits).
+
+    The row target and round cap were tuned against one device; with
+    `n_devices` accelerators (default: `jax.local_device_count()`) a
+    fused group shards row-wise across all of them, so both scale
+    linearly — a single-device host keeps the historical sizing
+    exactly."""
     if mean_rows_per_arch <= 0:
         return None
+    if n_devices is None:
+        import jax
+        n_devices = jax.local_device_count()
+    n_devices = max(1, int(n_devices))
     return max(AUTO_ROUND_MIN,
-               min(AUTO_ROUND_MAX,
-                   TARGET_FUSED_ROWS // max(1, int(mean_rows_per_arch))))
+               min(AUTO_ROUND_MAX * n_devices,
+                   (TARGET_FUSED_ROWS * n_devices)
+                   // max(1, int(mean_rows_per_arch))))
 
 
 def run_search(task: Union[TaskDescription, TaskWorkloads],
@@ -411,6 +529,7 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                constraints=None,
                seed: int = 0,
                round_size: Union[int, str] = 8,
+               overlap: Union[str, bool] = "auto",
                use_packed: bool = True,
                strategy_params: Optional[Dict[str, Any]] = None,
                trace: Union[None, bool, Any] = None,
@@ -444,7 +563,25 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  constrained and unconstrained entries never alias.
     round_size : architectures proposed per strategy round; "auto" scales
                  each round to the observed mean mapspace size (small
-                 mapspaces -> bigger fused rounds, large -> smaller)
+                 mapspaces -> bigger fused rounds, large -> smaller) and
+                 to the local device count (more devices -> bigger fused
+                 rounds, sharded row-wise across them)
+    overlap    : streaming pipeline — overlap round k's device execution
+                 with round k+1's host-side build.  "auto" (default)
+                 streams whenever `batching="fused"` and the strategy
+                 declares `lookahead = True` (exhaustive/random: `ask`
+                 is independent of `tell`); True asks for streaming but
+                 still degrades to the synchronous loop for adaptive
+                 strategies (anneal/evolve/bandit/hv-evolve need round
+                 k's feedback before proposing k+1) or per-arch
+                 batching; False forces the synchronous loop.  Winners,
+                 history, and frontier are bit-identical either way —
+                 streaming never changes *what* is evaluated, only when
+                 the host blocks.  Streaming runs with async disk-cache
+                 writeback (drained before the search returns) and adds
+                 "prefetch-build" / "device-wait" / "cache-flush" phases
+                 to the trace.  `report.overlap` records the resolved
+                 mode.
     use_packed : drive the fused path with `PackedMapspace` arrays
                  (vectorized construction/validation, winner-only
                  materialization, content-digest cache keys); False keeps
@@ -456,9 +593,10 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  `report.tracer`), False forces tracing off, or pass a
                  `Tracer`.  Spans are host-side only; per-round phases
                  (propose / static-filter / pack / validate / score /
-                 cache-get / cache-put / assemble / frontier-update)
-                 land in `report.phase_times` and the Chrome/JSONL
-                 exports.  The default is zero-overhead.
+                 cache-get / cache-put / assemble / frontier-update,
+                 plus prefetch-build / device-wait / cache-flush under
+                 streaming) land in `report.phase_times` and the
+                 Chrome/JSONL exports.  The default is zero-overhead.
     progress   : a ProgressStream, sink callable, or list of sinks fed
                  typed `ProgressEvent`s (arch evaluated/skipped, cache
                  lookups, frontier growth, round completion) — the
@@ -469,6 +607,9 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
     if batching not in ("fused", "per-arch"):
         raise ValueError(f"batching must be 'fused' or 'per-arch', "
                          f"got {batching!r}")
+    if overlap not in ("auto", True, False):
+        raise ValueError(f"overlap must be 'auto', True, or False, "
+                         f"got {overlap!r}")
     auto_round = round_size == "auto"
     if not auto_round and (not isinstance(round_size, int)
                            or round_size < 1):
@@ -518,6 +659,15 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         # over-area designs); the evaluator still rejects any that slip
         getattr(strat, "set_constraints", lambda c: None)(cset)
 
+    # streaming (tentpole): overlap round k's device execution with round
+    # k+1's host build.  Only safe when proposals cannot depend on
+    # pending feedback — the strategy must declare `lookahead = True` —
+    # and only useful on the fused path (per-arch scoring forces per job).
+    lookahead = bool(getattr(strat, "lookahead", False))
+    use_stream = (overlap is not False and batching == "fused"
+                  and lookahead)
+    report.overlap = use_stream
+
     memo: Dict[Coords, Union[ArchResult, SkippedArch]] = {}
     best: Optional[ArchResult] = None
     best_coords: Coords = ()
@@ -526,119 +676,245 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
     cur_round = 8 if auto_round else round_size
     stall_rounds = 0
     n_rounds = 0
+    # `planned` counts fresh coordinates committed to a round plan; it
+    # reaches the same value report.n_evaluated eventually does, but is
+    # current *at propose time* even when a round's bookkeeping has not
+    # landed yet (streaming proposes k+1 before finishing k).  `seen`
+    # likewise fronts for `memo` in the freshness check.
+    planned = 0
+    seen: set = set()
+    rounds_proposed = 0
     t_begin = time.perf_counter()
+
+    def try_propose() -> Optional[Tuple[List[Coords], List[Coords]]]:
+        """One strategy ask + dedup -> (ordered, fresh), or None when
+        the search is over (budget spent, lattice exhausted, strategy
+        done or stalled).  Identical proposal sequence in both loops:
+        all inputs (`planned`, `seen`, `cur_round`) are current at the
+        equivalent sequential point."""
+        nonlocal rounds_proposed, stall_rounds, planned
+        if planned >= budget or strat.exhausted:
+            return None
+        if len(seen) >= space.size or stall_rounds >= 100:
+            return None                 # nothing fresh left to evaluate
+        want = min(cur_round, budget - planned)
+        with tracer.span("propose", phase=True, round=rounds_proposed,
+                         want=want) as psp:
+            proposals = strat.ask(want)
+            seen_round = set()
+            ordered: List[Coords] = []
+            for c in proposals:
+                c = tuple(c)
+                if c not in seen_round:
+                    seen_round.add(c)
+                    ordered.append(c)
+            fresh = [c for c in ordered
+                     if c not in memo and c not in seen]
+            psp.set(proposed=len(ordered), fresh=len(fresh))
+        rounds_proposed += 1
+        if not proposals:
+            return None                 # strategy is awaiting nothing: stop
+        stall_rounds = 0 if fresh else stall_rounds + 1
+        planned += len(fresh)
+        seen.update(fresh)
+        return ordered, fresh
+
+    def resize() -> None:
+        """`round_size="auto"` update from the observed mean mapspace
+        size (reads prepare-time counters, so both loops see identical
+        values at the equivalent point)."""
+        nonlocal cur_round
+        if auto_round and evaluate.archs_scored:
+            sized = auto_round_size(evaluate.rows_scored
+                                    / evaluate.archs_scored)
+            if sized is not None:
+                cur_round = sized
+
+    def finish_round(ordered: List[Coords],
+                     fresh: List[Coords]) -> None:
+        """Frontier/history/feedback bookkeeping for one completed
+        round (shared verbatim by the sequential and streaming loops,
+        always in round order)."""
+        nonlocal best, best_coords, best_val, n_rounds
+        feedback: List[Tuple[Coords, float]] = []
+        fresh_set = set(fresh)
+        with tracer.span("frontier-update", phase=True,
+                         round=n_rounds):
+            for c in ordered:
+                res = memo[c]
+                if isinstance(res, SkippedArch):
+                    # statically rejected: the strategy still learns
+                    # (ordered by violation), but nothing joins
+                    # frontier/all_archs
+                    val = cset.skip_value(res.violation)
+                    feedback.append((c, val))
+                    if c in fresh_set:
+                        report.n_evaluated += 1
+                        report.n_skipped_infeasible += 1
+                        report.history.append({
+                            "step": report.n_evaluated, "coords": c,
+                            "arch": res.hardware.name, "value": val,
+                            "objectives": None, "feasible": False,
+                            "skipped": True})
+                        _observe(c, None, False)
+                        stream.emit("arch-skipped",
+                                    arch=res.hardware.name,
+                                    violation=res.violation,
+                                    step=report.n_evaluated)
+                    else:
+                        report.n_revisits += 1
+                    continue
+                raw = res.goal_value(goal)
+                obj_vals = objective_values(res.network,
+                                            report.objectives)
+                if cset is None:
+                    feasible, val = True, raw
+                else:
+                    violation = cset.violation(res.network,
+                                               res.hardware)
+                    feasible = violation <= 0.0
+                    val = raw if feasible \
+                        else cset.penalized(raw, violation)
+                feedback.append((c, val))
+                if c in fresh_set:
+                    report.n_evaluated += 1
+                    report.all_archs.append(res)
+                    if feasible:
+                        report.n_feasible += 1
+                        front_n = len(report.pareto)
+                        report.pareto.add_network(res.hardware.name,
+                                                  res.network,
+                                                  payload=res)
+                        if len(report.pareto) > front_n:
+                            stream.emit(
+                                "frontier-grew",
+                                arch=res.hardware.name,
+                                size=len(report.pareto),
+                                step=report.n_evaluated)
+                        if best is None or raw < best_val:
+                            best, best_coords, best_val = res, c, raw
+                    report.history.append({
+                        "step": report.n_evaluated, "coords": c,
+                        "arch": res.hardware.name, "value": val,
+                        "objectives": obj_vals, "feasible": feasible})
+                    _observe(c, obj_vals, feasible)
+                    n = res.network
+                    stream.emit("arch-evaluated",
+                                arch=res.hardware.name,
+                                cycles=n.cycles,
+                                energy_pj=n.energy_pj, edp=n.edp,
+                                value=val, feasible=feasible,
+                                step=report.n_evaluated)
+                else:
+                    report.n_revisits += 1
+            strat.tell(feedback)
+        n_rounds += 1
+        stream.emit("round-finished", round=n_rounds,
+                    n_evaluated=report.n_evaluated,
+                    n_fresh=len(fresh),
+                    best_value=(best_val if best is not None
+                                else None),
+                    pareto_size=len(report.pareto))
+
+    # streaming runs with the cache's bounded async disk writeback: the
+    # memory tier and stats stay synchronous (deterministic reads), only
+    # the fsync-ish tail leaves the hot loop.  Drained before return.
+    writer_on = bool(use_stream and cache.path)
+
     # the tracer becomes ambient for the whole search, so instrumented
     # library code (mapper, backend, batch_frontier, cache) records into
     # it without parameter plumbing; all spans are host-side only
     with activate(tracer), tracer.span("run_search", strategy=strat.name,
                                        backend=backend, goal=goal,
                                        budget=budget,
-                                       space_size=space.size):
-        while report.n_evaluated < budget and not strat.exhausted:
-            if len(memo) >= space.size or stall_rounds >= 100:
-                break                   # nothing fresh left to evaluate
-            want = min(cur_round, budget - report.n_evaluated)
-            with tracer.span("propose", phase=True, round=n_rounds,
-                             want=want) as psp:
-                proposals = strat.ask(want)
-                seen_round = set()
-                ordered: List[Coords] = []
-                for c in proposals:
-                    c = tuple(c)
-                    if c not in seen_round:
-                        seen_round.add(c)
-                        ordered.append(c)
-                fresh = [c for c in ordered if c not in memo]
-                psp.set(proposed=len(ordered), fresh=len(fresh))
-            if not proposals:
-                break                   # strategy is awaiting nothing: stop
-            stall_rounds = 0 if fresh else stall_rounds + 1
-            if fresh:
-                memo.update(evaluate(fresh))
-                if auto_round and evaluate.archs_scored:
-                    sized = auto_round_size(evaluate.rows_scored
-                                            / evaluate.archs_scored)
-                    if sized is not None:
-                        cur_round = sized
-            feedback: List[Tuple[Coords, float]] = []
-            fresh_set = set(fresh)
-            with tracer.span("frontier-update", phase=True,
-                             round=n_rounds):
-                for c in ordered:
-                    res = memo[c]
-                    if isinstance(res, SkippedArch):
-                        # statically rejected: the strategy still learns
-                        # (ordered by violation), but nothing joins
-                        # frontier/all_archs
-                        val = cset.skip_value(res.violation)
-                        feedback.append((c, val))
-                        if c in fresh_set:
-                            report.n_evaluated += 1
-                            report.n_skipped_infeasible += 1
-                            report.history.append({
-                                "step": report.n_evaluated, "coords": c,
-                                "arch": res.hardware.name, "value": val,
-                                "objectives": None, "feasible": False,
-                                "skipped": True})
-                            _observe(c, None, False)
-                            stream.emit("arch-skipped",
-                                        arch=res.hardware.name,
-                                        violation=res.violation,
-                                        step=report.n_evaluated)
-                        else:
-                            report.n_revisits += 1
-                        continue
-                    raw = res.goal_value(goal)
-                    obj_vals = objective_values(res.network,
-                                                report.objectives)
-                    if cset is None:
-                        feasible, val = True, raw
-                    else:
-                        violation = cset.violation(res.network,
-                                                   res.hardware)
-                        feasible = violation <= 0.0
-                        val = raw if feasible \
-                            else cset.penalized(raw, violation)
-                    feedback.append((c, val))
-                    if c in fresh_set:
-                        report.n_evaluated += 1
-                        report.all_archs.append(res)
-                        if feasible:
-                            report.n_feasible += 1
-                            front_n = len(report.pareto)
-                            report.pareto.add_network(res.hardware.name,
-                                                      res.network,
-                                                      payload=res)
-                            if len(report.pareto) > front_n:
-                                stream.emit(
-                                    "frontier-grew",
-                                    arch=res.hardware.name,
-                                    size=len(report.pareto),
-                                    step=report.n_evaluated)
-                            if best is None or raw < best_val:
-                                best, best_coords, best_val = res, c, raw
-                        report.history.append({
-                            "step": report.n_evaluated, "coords": c,
-                            "arch": res.hardware.name, "value": val,
-                            "objectives": obj_vals, "feasible": feasible})
-                        _observe(c, obj_vals, feasible)
-                        n = res.network
-                        stream.emit("arch-evaluated",
-                                    arch=res.hardware.name,
-                                    cycles=n.cycles,
-                                    energy_pj=n.energy_pj, edp=n.edp,
-                                    value=val, feasible=feasible,
-                                    step=report.n_evaluated)
-                    else:
-                        report.n_revisits += 1
-                strat.tell(feedback)
-            n_rounds += 1
-            stream.emit("round-finished", round=n_rounds,
-                        n_evaluated=report.n_evaluated,
-                        n_fresh=len(fresh),
-                        best_value=(best_val if best is not None
-                                    else None),
-                        pareto_size=len(report.pareto))
+                                       space_size=space.size,
+                                       overlap=use_stream):
+        if writer_on:
+            cache.start_async_writes()
+        try:
+            if not use_stream:
+                while True:
+                    p = try_propose()
+                    if p is None:
+                        break
+                    ordered, fresh = p
+                    if fresh:
+                        memo.update(evaluate(fresh))
+                        resize()
+                    finish_round(ordered, fresh)
+            else:
+                import concurrent.futures
+
+                def _prepare_bg(batch):
+                    # contextvars do not cross threads: re-activate the
+                    # ambient tracer so pack/validate/cache-get spans
+                    # from the worker land in the same buffer
+                    with activate(tracer):
+                        return evaluate.prepare(batch)
+
+                pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="repro-prefetch")
+                try:
+                    # bootstrap: round 0 is proposed and prepared on the
+                    # main thread (there is nothing to overlap with yet)
+                    ready = None
+                    p = try_propose()
+                    if p is not None:
+                        ordered, fresh = p
+                        plan = (evaluate.prepare(fresh) if fresh
+                                else None)
+                        if plan is not None:
+                            evaluate.absorb(plan)
+                            resize()
+                        ready = (ordered, fresh, plan)
+                    while ready is not None:
+                        ordered, fresh, plan = ready
+                        # propose k+1 (lookahead contract: ask is
+                        # independent of round k's pending tell) and
+                        # hand its host build to the worker *before*
+                        # launching round k, so the build overlaps both
+                        # dispatch/compile and device execution
+                        nxt = try_propose()
+                        fut = (pool.submit(_prepare_bg, nxt[1])
+                               if nxt is not None and nxt[1] else None)
+                        if plan is not None:
+                            pending = evaluate.launch(plan)
+                            bests = evaluate.collect(plan, pending)
+                            memo.update(evaluate.finalize(plan, bests))
+                        finish_round(ordered, fresh)
+                        if nxt is None:
+                            ready = None
+                            continue
+                        ordered2, fresh2 = nxt
+                        plan2 = None
+                        if fut is not None:
+                            # any build time not already hidden under
+                            # round k shows up here, making the residual
+                            # (non-overlapped) cost visible in the trace
+                            with tracer.span("prefetch-build",
+                                             phase=True,
+                                             archs=len(fresh2)):
+                                plan2 = fut.result()
+                        if plan2 is not None:
+                            evaluate.absorb(plan2)
+                            resize()
+                        ready = (ordered2, fresh2, plan2)
+                finally:
+                    pool.shutdown(wait=True)
+            if writer_on:
+                # drain inside the traced region so flush cost is a
+                # phase, not anonymous tail time
+                with tracer.span("cache-flush", phase=True):
+                    cache.stop_async_writes()
+                errs = cache.writer_errors
+                if errs:
+                    raise RuntimeError(
+                        f"async cache writeback failed: {errs[0]!r}")
+        finally:
+            if writer_on:
+                # exception path: still drain (completed puts must land;
+                # idempotent after the traced flush above)
+                cache.stop_async_writes()
 
     evaluate.sync_cache_counters()
     report.wall_time_s = time.perf_counter() - t_begin

@@ -50,6 +50,15 @@ class Strategy:
 
     name = "base"
 
+    #: A lookahead strategy promises that `ask` is independent of
+    #: `tell`/`observe` — proposals depend only on the space, the seed,
+    #: and how many coordinates were already asked for.  The streaming
+    #: driver may then propose round k+1 before round k's scores land
+    #: without changing what gets evaluated.  Adaptive strategies
+    #: (anneal/evolve/bandit/hv-evolve) must leave this False: the
+    #: driver degrades them to the synchronous loop.
+    lookahead = False
+
     def __init__(self, space: ArchSpace, *, seed: int = 0):
         self.space = space
         self.rng = random.Random(seed)
@@ -101,6 +110,8 @@ class Strategy:
 class ExhaustiveStrategy(Strategy):
     """Seed-explorer parity: enumerate the whole lattice in Designer order."""
 
+    lookahead = True        # pure enumeration: ask ignores tell entirely
+
     def __init__(self, space: ArchSpace, *, seed: int = 0):
         super().__init__(space, seed=seed)
         self._it = iter(space.all_coords())
@@ -119,6 +130,8 @@ class ExhaustiveStrategy(Strategy):
 @register("random")
 class RandomStrategy(Strategy):
     """Budgeted sampling without replacement (uniform over the lattice)."""
+
+    lookahead = True        # the sample stream is fixed by the seed
 
     _SHUFFLE_CAP = 1 << 20      # materialize + shuffle below this size
 

@@ -137,6 +137,105 @@ def test_sync_barrier_callers_are_clean(tmp_path):
     assert run_analysis(root, rules=["R-SYNC"]) == []
 
 
+# -- @deferred_sync contract ------------------------------------------------
+_SYNC_DEFERRED = """\
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.obs import deferred_sync
+
+    @deferred_sync
+    def launch(x):
+        return jnp.asarray(x) * 2.0
+"""
+
+
+def test_deferred_sync_bare_callsite_fires(tmp_path):
+    src = _SYNC_DEFERRED + """
+    def run(x):
+        return launch(x)
+"""
+    root = mk_repo(tmp_path, {"src/repro/core/score.py": src})
+    findings = run_analysis(root, rules=["R-SYNC"])
+    assert len(findings) == 1
+    assert "deferred-sync producer" in findings[0].message
+    assert findings[0].symbol == "run"
+
+
+def test_deferred_sync_span_bracketed_is_clean(tmp_path):
+    src = _SYNC_DEFERRED + """
+    def run(x, tr):
+        with tr.span("score"):
+            p = launch(x)
+        with tr.span("device-wait"):
+            return np.asarray(p)
+"""
+    root = mk_repo(tmp_path, {"src/repro/core/score.py": src})
+    assert run_analysis(root, rules=["R-SYNC"]) == []
+
+
+def test_deferred_sync_caller_bracket_is_clean(tmp_path):
+    # the launching span may live one level up (every callsite of the
+    # helper that launches is bracketed)
+    src = _SYNC_DEFERRED + """
+    def _go(x):
+        return launch(x)
+
+    def run(x, tr):
+        with tr.span("score"):
+            return _go(x)
+"""
+    root = mk_repo(tmp_path, {"src/repro/core/score.py": src})
+    assert run_analysis(root, rules=["R-SYNC"]) == []
+
+
+def test_deferred_sync_unforced_result_still_needs_span(tmp_path):
+    # the pin side: a deferred producer can never be laundered into a
+    # barrier, so forcing its result outside a span still fires
+    src = _SYNC_DEFERRED + """
+    def run(x, tr):
+        with tr.span("score"):
+            p = launch(x)
+        return np.asarray(p)
+"""
+    root = mk_repo(tmp_path, {"src/repro/core/score.py": src})
+    findings = run_analysis(root, rules=["R-SYNC"])
+    assert len(findings) == 1
+    assert "asarray" in findings[0].message
+    assert findings[0].symbol == "run"
+
+
+def test_deferred_sync_stale_marker_fires(tmp_path):
+    src = """\
+    import numpy as np
+    from repro.obs import deferred_sync
+
+    @deferred_sync
+    def shuffle(rows):
+        return np.asarray(rows)
+
+    def run(rows, tr):
+        with tr.span("pack"):
+            return shuffle(rows)
+"""
+    root = mk_repo(tmp_path, {"src/repro/core/packer.py": src})
+    findings = run_analysis(root, rules=["R-SYNC"])
+    assert len(findings) == 1
+    assert "stale marker" in findings[0].message
+    assert findings[0].symbol == "shuffle"
+
+
+def test_live_repo_declares_deferred_producers():
+    """The streaming pipeline's launch path is marked and bracketed in
+    the live tree (the contract the fixtures above enforce)."""
+    from repro.analysis.rules.sync import _Classifier
+    idx = build_index(REPO)
+    cls = _Classifier(idx)
+    assert "repro.search.batch_frontier.fused_launch" in cls.deferred
+    assert "repro.search.batch_frontier._dispatch_shards" in cls.deferred
+    for d in cls.deferred:
+        assert cls.ret_dev[d]           # pinned device-returning
+
+
 # ---------------------------------------------------------------------------
 # R-DET fixtures
 # ---------------------------------------------------------------------------
