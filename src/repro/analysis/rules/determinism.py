@@ -12,7 +12,8 @@ nondeterministic leaks into these paths:
   * **strategy module** (`search/strategies.py`): same bans — every
     strategy draws from its seeded `random.Random(seed)`;
   * **digest closures** (everything reachable from `cache_key`,
-    `ConstraintSet.digest`, `PackedMapspace.digest`): additionally,
+    `ConstraintSet.digest`, `PackedMapspace.digest`, or the service's
+    `SearchQuery.digest` coalescing identity): additionally,
     every `json.dumps` must pass `sort_keys=True` and nothing may
     iterate a `set` (unordered iteration feeding a hash produces
     run-dependent digests).
@@ -37,7 +38,11 @@ STRATEGY_MODULES = ("search/strategies.py",)
 #: digest closure roots: (module relpath, function qualname)
 DIGEST_ROOTS = (("search/cache.py", "cache_key"),
                 ("search/constraints.py", "ConstraintSet.digest"),
-                ("core/mapspace_array.py", "PackedMapspace.digest"))
+                ("core/mapspace_array.py", "PackedMapspace.digest"),
+                # the DSE service's request-coalescing identity: two
+                # submits share a job iff these digests are equal, so it
+                # is held to the same determinism bar as the cache key
+                ("serve/dse_service.py", "SearchQuery.digest"))
 
 UNSEEDED_FACTORIES = {"numpy.random.default_rng", "random.Random"}
 GLOBAL_DRAWS = ("numpy.random.", "random.")

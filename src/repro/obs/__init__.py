@@ -21,8 +21,8 @@ from .manifest import (MANIFEST_DIR, RunManifest, build_manifest, git_sha,
                        space_digest)
 from .metrics import (NULL_METRICS, Counter, Gauge, Histogram, Metrics,
                       NullMetrics)
-from .progress import (EVENT_KINDS, CollectSink, ConsoleSink, ProgressEvent,
-                       ProgressStream, as_stream)
+from .progress import (EVENT_KINDS, CollectSink, ConsoleSink, EventCursor,
+                       ProgressEvent, ProgressStream, ReplaySink, as_stream)
 from .trace import (DRIVER_PHASES, NULL_TRACER, PHASES, NullTracer, Span,
                     TraceBuffer, Tracer, activate, as_tracer,
                     current_tracer, deferred_sync, family_of)

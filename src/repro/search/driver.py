@@ -72,6 +72,7 @@ class SearchReport:
     history: List[Dict[str, Any]]        # one row per *fresh* evaluation
     backend: str = "jnp"                 # resolved scoring engine
     overlap: bool = False                # streaming pipeline actually used
+    cancelled: bool = False              # stopped early by `cancel=`
     constraints: Optional[ConstraintSet] = None
     n_evaluated: int = 0                 # distinct architectures evaluated
     n_revisits: int = 0                  # strategy re-proposals served free
@@ -148,6 +149,7 @@ class SearchReport:
             "goal": self.goal, "strategy": self.strategy,
             "backend": self.backend,
             "overlap": self.overlap,
+            "cancelled": self.cancelled,
             "constraints": str(self.constraints) if self.constraints
             else None,
             "budget": self.budget, "space_size": self.space_size,
@@ -534,6 +536,7 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                strategy_params: Optional[Dict[str, Any]] = None,
                trace: Union[None, bool, Any] = None,
                progress: Any = None,
+               cancel: Any = None,
                verbose: bool = False) -> SearchReport:
     """Multi-strategy, multi-objective design-space exploration.
 
@@ -602,6 +605,16 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                  lookups, frontier growth, round completion) — the
                  streaming channel for a DSE service.  `verbose=True`
                  subscribes the ConsoleSink (historical print format).
+    cancel     : cooperative cancellation — a `threading.Event` (or any
+                 object with `is_set()`), or a zero-arg callable
+                 returning True to stop.  Checked once per round at the
+                 propose boundary (both loops route through the same
+                 choke point), so a fired cancel lets the in-flight
+                 round complete cleanly and the search returns a
+                 *partial* but fully consistent report —
+                 `report.cancelled=True`, frontier/history/best cover
+                 every finished round.  Cancelling before the first
+                 round completes raises (there is no best yet).
     """
     from ..core.backend import resolve_backend
     if batching not in ("fused", "per-arch"):
@@ -631,6 +644,15 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
     # (anneal/evolve) from spinning on revisits once everything is memoized
     budget = space.size if budget is None else max(1, min(budget,
                                                           space.size))
+    if cancel is None:
+        cancel_fn = None
+    elif hasattr(cancel, "is_set"):
+        cancel_fn = cancel.is_set       # threading.Event & friends
+    elif callable(cancel):
+        cancel_fn = cancel
+    else:
+        raise TypeError(f"cancel must be an Event-like (is_set) or a "
+                        f"zero-arg callable, got {type(cancel).__name__}")
 
     tracer = as_tracer(trace)
     stream = as_stream(progress)
@@ -693,6 +715,12 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         all inputs (`planned`, `seen`, `cur_round`) are current at the
         equivalent sequential point."""
         nonlocal rounds_proposed, stall_rounds, planned
+        if cancel_fn is not None and cancel_fn():
+            # cooperative cancellation: both loops call try_propose at
+            # the round boundary, so stopping here never abandons an
+            # in-flight round — the report stays internally consistent
+            report.cancelled = True
+            return None
         if planned >= budget or strat.exhausted:
             return None
         if len(seen) >= space.size or stall_rounds >= 100:
@@ -922,6 +950,10 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
         report.phase_times = tracer.phase_times()
         tracer.metrics.counter("search.rounds").inc(n_rounds)
     if best is None:
+        if report.cancelled:
+            raise RuntimeError(
+                "search cancelled before any feasible architecture "
+                "completed a round — no partial result to return")
         if cset is not None:
             raise RuntimeError(
                 f"no feasible architecture under {cset} "

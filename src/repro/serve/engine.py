@@ -50,6 +50,13 @@ class ServeEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request):
+        # a zero-length prompt has no last-token logits to seed decoding
+        # from (`_prefill_slot` derives the first output from the final
+        # prefill step) — reject at admission rather than crash mid-tick
+        if len(req.prompt) == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — prefill needs at "
+                f"least one token to seed decoding (prepend a BOS id)")
         req.out_tokens = []
         self.pending.append(req)
 

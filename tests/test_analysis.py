@@ -623,6 +623,48 @@ def test_mutation_unseeded_rng_fires_r_det(tmp_path):
     assert "unseeded" in findings[0].message
 
 
+# Coverage proofs for the DSE service module: the service's digest,
+# spans, and event kinds are held to the same static discipline as the
+# search core — each mutation must fire the corresponding rule.
+def test_mutation_unsorted_service_digest_fires_r_det(tmp_path):
+    # SearchQuery.digest is a DIGEST_ROOTS closure root: dropping
+    # sort_keys lets dict order leak into the coalescing identity
+    root = _copy_repo(tmp_path)
+    _mutate(root, "src/repro/serve/dse_service.py",
+            "json.dumps(self.signature(), sort_keys=True,\n"
+            "                              default=str)",
+            "json.dumps(self.signature(), default=str)")
+    findings = run_analysis(root, rules=["R-DET"])
+    assert len(findings) == 1
+    assert findings[0].path.endswith("serve/dse_service.py")
+    assert findings[0].symbol == "SearchQuery.digest"
+    assert "sort_keys" in findings[0].message
+
+
+def test_mutation_bogus_service_phase_fires_r_trace(tmp_path):
+    root = _copy_repo(tmp_path)
+    _mutate(root, "src/repro/serve/dse_service.py",
+            'self.tracer.span("service.job", digest=',
+            'self.tracer.span("service.job", phase=True, digest=')
+    findings = run_analysis(root, rules=["R-TRACE"])
+    assert len(findings) == 1
+    assert findings[0].path.endswith("serve/dse_service.py")
+    assert "not in the canonical" in findings[0].message
+
+
+def test_mutation_typoed_service_event_kind_fires_r_reg(tmp_path):
+    root = _copy_repo(tmp_path)
+    _mutate(root, "src/repro/serve/dse_service.py",
+            'job.emit("job-admitted"', 'job.emit("job-started"')
+    findings = run_analysis(root, rules=["R-REG"])
+    msgs = [f.message for f in findings]
+    # the typo'd emit is flagged where it happens...
+    assert any("'job-started'" in m and "not a declared" in m
+               for m in msgs)
+    # ...and the now-orphaned declared kind is flagged as dead
+    assert any("'job-admitted'" in m and "nothing" in m for m in msgs)
+
+
 # ---------------------------------------------------------------------------
 # engine / finding plumbing
 # ---------------------------------------------------------------------------

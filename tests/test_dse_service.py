@@ -1,0 +1,301 @@
+"""Service-level contract tests for the DSE search service
+(`repro.serve.dse_service`).
+
+The load-bearing guarantees, each proven end to end:
+
+  * **coalescing** — K concurrent identical queries run exactly one
+    underlying `run_search` (spied at the service's driver entry), and
+    every subscriber's event stream is equal after replay-merge, ending
+    in bit-identical winners vs a fresh solo run;
+  * **isolation** — distinct digests never coalesce;
+  * **cancellation** — a mid-round cancel returns a partial but
+    internally consistent frontier (`report.cancelled`);
+  * **deadlines** — expiry (on an injected clock) cancels with reason
+    "deadline" and still returns the partial frontier;
+  * **replay** — a subscriber attaching after completion receives the
+    full history.
+
+Threaded tests guard every blocking call with an explicit timeout so a
+logic bug fails the test instead of hanging the run (CI adds
+pytest-timeout as a second net).
+"""
+import threading
+import types
+
+import pytest
+
+from repro.core import Conv2D, FC, MapperConfig, Pool2D, TaskDescription
+from repro.search import ArchSpace, run_search
+from repro.serve import dse_service as svc_mod
+from repro.serve.dse_service import DSEService, SearchQuery
+
+TASK = TaskDescription(
+    name="tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+CFG = MapperConfig(max_mappings=200, seed=0)
+SPACE = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64,),
+                          gbuf_words=(2048, 8192), bits=16)
+WAIT = 120.0                 # generous outer bound on any real search
+
+
+def query(**kw) -> SearchQuery:
+    kw.setdefault("task", TASK)
+    kw.setdefault("space", SPACE)
+    kw.setdefault("cfg", CFG)
+    return SearchQuery(**kw)
+
+
+@pytest.fixture(scope="module")
+def solo_report():
+    """A fresh, service-free run of the same query — the bit-identity
+    baseline."""
+    return run_search(TASK, SPACE, cfg=CFG)
+
+
+def _fake_report():
+    """Minimal report stand-in for pure-concurrency tests (no scoring)."""
+    best = types.SimpleNamespace(hardware=types.SimpleNamespace(name="fk"))
+    return types.SimpleNamespace(
+        cancelled=False, best=best, goal_value=lambda: 1.0,
+        n_evaluated=1, pareto=(), wall_time_s=0.0,
+        manifest=types.SimpleNamespace(run_id="run-fake"))
+
+
+# ---------------------------------------------------------------------------
+# coalescing, proven end to end (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_concurrent_identical_queries_coalesce(monkeypatch, solo_report):
+    K = 5
+    gate = threading.Event()
+    calls = []
+    real = svc_mod.run_search
+
+    def spy(*args, **kw):
+        calls.append(threading.get_ident())
+        assert gate.wait(timeout=WAIT), "gate never released"
+        return real(*args, **kw)
+
+    monkeypatch.setattr(svc_mod, "run_search", spy)
+    with DSEService(workers=2, tracer=True) as svc:
+        barrier = threading.Barrier(K)
+        tickets = [None] * K
+        errors = []
+
+        def client(i):
+            try:
+                barrier.wait(timeout=WAIT)
+                tickets[i] = svc.submit(query())
+            except BaseException as e:   # surfaced below
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(K)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=WAIT)
+        assert not errors
+        assert all(t is not None for t in tickets)
+        # all K submits landed on one job before it could run
+        snap = svc.snapshot()
+        assert snap["admitted"] == 1
+        assert snap["coalesced"] == K - 1
+        assert sum(t.coalesced for t in tickets) == K - 1
+        digest = tickets[0].digest
+        assert all(t.digest == digest for t in tickets)
+
+        gate.set()
+        reports = [t.result(timeout=WAIT) for t in tickets]
+
+        # exactly one underlying run_search
+        assert len(calls) == 1
+
+        # bit-identical winners vs the fresh solo run
+        for rep in reports:
+            assert rep.best.hardware.name == \
+                solo_report.best.hardware.name
+            assert rep.goal_value() == solo_report.goal_value()
+            assert [row["value"] for row in rep.history] == \
+                [row["value"] for row in solo_report.history]
+            assert rep.n_evaluated == solo_report.n_evaluated
+
+        # every subscriber sees the same monotone stream (replay+live)
+        streams = [[e.to_dict() for e in t.drain(timeout=5.0)]
+                   for t in tickets]
+        assert all(s == streams[0] for s in streams[1:])
+        kinds = [e["kind"] for e in streams[0]]
+        assert kinds[0] == "job-admitted"
+        assert kinds[-1] == "job-finished"
+        assert kinds.count("job-coalesced") == K - 1
+        assert "search-finished" in kinds
+
+        # late subscriber: full replay after completion
+        late = svc.subscribe(digest)
+        assert late is not None
+        assert [e.to_dict() for e in late.drain(timeout=5.0)] == streams[0]
+
+        # per-job provenance manifest
+        assert reports[0].manifest is not None
+        assert reports[0].manifest.run_id.startswith("run-")
+
+        # observability: spans + counters on the service tracer
+        names = {s.name for s in svc.tracer.buffer.snapshot()}
+        assert {"service.admit", "service.coalesce",
+                "service.job"} <= names
+        metrics = svc.tracer.metrics.snapshot()
+        assert metrics["counters"]["service.admitted"] == 1
+        assert metrics["counters"]["service.coalesced"] == K - 1
+
+    assert svc.snapshot()["completed"] == 1
+
+
+def test_distinct_digests_never_coalesce(monkeypatch):
+    gate = threading.Event()
+    calls = []
+
+    def spy(*args, **kw):
+        calls.append(1)
+        assert gate.wait(timeout=WAIT)
+        return _fake_report()
+
+    monkeypatch.setattr(svc_mod, "run_search", spy)
+    with DSEService(workers=2) as svc:
+        t1 = svc.submit(query())
+        t2 = svc.submit(query(constraints="area_mm2<=1e9"))
+        assert t1.digest != t2.digest
+        snap = svc.snapshot()
+        assert snap["admitted"] == 2 and snap["coalesced"] == 0
+        gate.set()
+        t1.result(timeout=WAIT)
+        t2.result(timeout=WAIT)
+        assert len(calls) == 2
+
+
+def test_retired_jobs_do_not_coalesce(monkeypatch):
+    monkeypatch.setattr(svc_mod, "run_search",
+                        lambda *a, **k: _fake_report())
+    with DSEService(workers=1) as svc:
+        first = svc.submit(query())
+        first.result(timeout=WAIT)
+        second = svc.submit(query())     # same digest, job already done
+        second.result(timeout=WAIT)
+        snap = svc.snapshot()
+        assert snap["admitted"] == 2 and snap["coalesced"] == 0
+        # both full histories remain subscribable
+        assert svc.subscribe(first.digest) is not None
+
+
+# ---------------------------------------------------------------------------
+# cancellation and deadlines (partial-frontier results)
+# ---------------------------------------------------------------------------
+def test_cancel_mid_round_returns_partial_frontier():
+    # sequential loop + one arch per round -> the cancel fired by the
+    # first round-finished event deterministically stops round 2
+    q = query(round_size=1, overlap=False)
+    with DSEService(workers=1) as svc:
+        fired = []
+
+        def cancel_sink(ev):
+            if ev.kind == "round-finished" and not fired:
+                fired.append(ev)
+                assert svc.cancel(q.digest())
+
+        ticket = svc.submit(q, sink=cancel_sink)
+        rep = ticket.result(timeout=WAIT)
+        assert rep.cancelled
+        assert rep.n_evaluated == 1          # partial: 1 of 4
+        assert rep.best is not None
+        assert len(rep.pareto) >= 1
+        assert ticket.status == "cancelled"
+        assert ticket.job.cancel_reason == "client"
+        kinds = [e.kind for e in ticket.drain(timeout=5.0)]
+        assert "job-cancelled" in kinds
+        assert kinds[-1] == "job-finished"
+        snap = svc.snapshot()
+        assert snap["cancelled"] == 1 and snap["expired"] == 0
+
+
+def test_deadline_expiry_returns_partial_frontier():
+    clk = [0.0]
+    q = query(round_size=1, overlap=False)
+    with DSEService(workers=1, clock=lambda: clk[0]) as svc:
+        fired = []
+
+        def advance_clock(ev):
+            if ev.kind == "round-finished" and not fired:
+                fired.append(ev)
+                clk[0] = 1e9                 # blow past the deadline
+
+        ticket = svc.submit(q, timeout_s=10.0, sink=advance_clock)
+        rep = ticket.result(timeout=WAIT)
+        assert rep.cancelled
+        assert rep.n_evaluated == 1
+        assert rep.best is not None
+        assert ticket.job.cancel_reason == "deadline"
+        snap = svc.snapshot()
+        assert snap["cancelled"] == 1 and snap["expired"] == 1
+
+
+def test_coalesced_submit_loosens_deadline(monkeypatch):
+    gate = threading.Event()
+    monkeypatch.setattr(
+        svc_mod, "run_search",
+        lambda *a, **k: (gate.wait(timeout=WAIT), _fake_report())[1])
+    clk = [0.0]
+    with DSEService(workers=1, clock=lambda: clk[0]) as svc:
+        t1 = svc.submit(query(), timeout_s=5.0)
+        assert t1.job.deadline == 5.0
+        svc.submit(query(), timeout_s=60.0)      # most patient wins
+        assert t1.job.deadline == 60.0
+        svc.submit(query(), timeout_s=None)      # no deadline at all
+        assert t1.job.deadline is None
+        gate.set()
+        t1.result(timeout=WAIT)
+
+
+# ---------------------------------------------------------------------------
+# warm shared cache + lifecycle
+# ---------------------------------------------------------------------------
+def test_resubmit_after_completion_hits_warm_cache(tmp_path):
+    with DSEService(workers=1, cache=str(tmp_path / "cache")) as svc:
+        first = svc.submit(query()).result(timeout=WAIT)
+        assert first.n_enumerations > 0
+        second = svc.submit(query()).result(timeout=WAIT)
+        # same winner, zero mapspace scoring: served from the warm tier
+        assert second.n_enumerations == 0
+        assert second.best.hardware.name == first.best.hardware.name
+        assert second.goal_value() == first.goal_value()
+        # disk-cache services persist per-job provenance manifests
+        assert first.manifest_path is not None
+
+
+def test_closed_service_rejects_submits(monkeypatch):
+    monkeypatch.setattr(svc_mod, "run_search",
+                        lambda *a, **k: _fake_report())
+    svc = DSEService(workers=1)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(query())
+
+
+def test_failed_job_propagates_error(monkeypatch):
+    def boom(*a, **k):
+        raise RuntimeError("scoring exploded")
+
+    monkeypatch.setattr(svc_mod, "run_search", boom)
+    with DSEService(workers=1) as svc:
+        ticket = svc.submit(query())
+        with pytest.raises(RuntimeError, match="scoring exploded"):
+            ticket.result(timeout=WAIT)
+        assert ticket.status == "failed"
+        kinds = [e.kind for e in ticket.drain(timeout=5.0)]
+        assert kinds[-1] == "job-finished"
+        assert svc.snapshot()["failed"] == 1
+
+
+def test_unknown_digest_subscribe_returns_none():
+    with DSEService(workers=1) as svc:
+        assert svc.subscribe("no-such-digest") is None

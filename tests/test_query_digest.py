@@ -1,0 +1,207 @@
+"""Property tests for the DSE service's request-coalescing identity
+(`SearchQuery.digest`) — mirroring tests/test_cache.py's key-component
+sweep at the service layer.
+
+The dedup identity must be:
+
+  * **invariant** under representation noise — constraint list order and
+    whitespace, strategy_params insertion order, TaskDescription vs
+    pre-analyzed TaskWorkloads, an arch list vs its `from_archs` wrap,
+    `budget=None` vs the explicit lattice size vs any over-clamp, and
+    every `overlap` value (scheduling only — winners are bit-identical);
+  * **sensitive** to every semantic field: workload, hardware lattice
+    *content* (not just axis shape), constraints, strategy + params,
+    budget, backend, goal, seed, cfg, objectives, batching, round_size,
+    cache_level, use_packed, and the schema version.
+
+Each invariant runs as a seeded deterministic sweep; a hypothesis
+variant (same predicate, adversarial permutations) runs when hypothesis
+is installed — the pattern of tests/test_pareto_hv.py.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import (Conv2D, FC, MapperConfig, Pool2D, TaskDescription,
+                        analyze, make_spatial_arch)
+from repro.search import ArchSpace
+from repro.serve import dse_service as svc_mod
+from repro.serve.dse_service import SearchQuery
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+TASK = TaskDescription(
+    name="tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+SPACE = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64,),
+                          gbuf_words=(2048, 8192), bits=16)
+CONS = ["area_mm2<=1e4", "power_w<=1e3", "energy_pj<=1e12"]
+
+
+def q(**kw) -> SearchQuery:
+    kw.setdefault("task", TASK)
+    kw.setdefault("space", SPACE)
+    return SearchQuery(**kw)
+
+
+# ---------------------------------------------------------------------------
+# invariance: representation noise must not move the digest
+# ---------------------------------------------------------------------------
+def test_digest_is_deterministic():
+    assert q().digest() == q().digest()
+
+
+def test_constraint_order_and_whitespace_irrelevant():
+    base = q(constraints=CONS).digest()
+    rng = random.Random(0)
+    for _ in range(10):
+        perm = CONS[:]
+        rng.shuffle(perm)
+        noisy = [c.replace("<=", " <= ") if rng.random() < 0.5 else c
+                 for c in perm]
+        assert q(constraints=noisy).digest() == base
+
+
+def test_strategy_params_order_irrelevant():
+    a = q(strategy="random", strategy_params={"a": 1, "b": 2}).digest()
+    b = q(strategy="random", strategy_params={"b": 2, "a": 1}).digest()
+    assert a == b
+
+
+def test_task_description_equals_preanalyzed_workloads():
+    assert q(task=TASK).digest() == q(task=analyze(TASK)).digest()
+
+
+def test_arch_list_equals_from_archs_wrap():
+    archs = [SPACE.at(c) for c in SPACE.all_coords()]
+    assert q(space=archs).digest() == \
+        q(space=ArchSpace.from_archs(archs)).digest()
+
+
+def test_budget_clamps_to_one_identity():
+    size = SPACE.size
+    assert q(budget=None).digest() == q(budget=size).digest() \
+        == q(budget=size + 999).digest()
+
+
+def test_overlap_is_scheduling_only():
+    # overlap never changes *what* is evaluated (PR 7: bit-identical
+    # winners), so requests differing only in overlap must coalesce
+    assert q(overlap="auto").digest() == q(overlap=True).digest() \
+        == q(overlap=False).digest()
+
+
+def test_default_cfg_equals_explicit_default():
+    assert q(cfg=None).digest() == q(cfg=MapperConfig()).digest()
+
+
+# ---------------------------------------------------------------------------
+# sensitivity: every semantic field must move the digest
+# ---------------------------------------------------------------------------
+def test_every_semantic_field_moves_the_digest():
+    base = q().digest()
+    other_task = dataclasses.replace(TASK, batch_size=4)
+    variants = {
+        "workload": q(task=other_task),
+        "hw-lattice": q(space=ArchSpace.spatial(
+            num_pes=(16, 64), rf_words=(64,), gbuf_words=(2048, 4096),
+            bits=16)),
+        "constraints": q(constraints="area_mm2<=1e4"),
+        "constraint-bound": q(constraints="area_mm2<=2e4"),
+        "strategy": q(strategy="random"),
+        "strategy-params": q(strategy="random",
+                             strategy_params={"x": 1}),
+        "budget": q(budget=1),
+        "backend": q(backend="pallas" if q().resolved_backend == "jnp"
+                     else "jnp"),
+        "goal": q(goal="latency"),
+        "seed": q(seed=1),
+        "cfg": q(cfg=MapperConfig(max_mappings=50, seed=0)),
+        "objectives": q(objectives=("cycles", "energy_pj")),
+        "batching": q(batching="per-arch"),
+        "round-size": q(round_size=4),
+        "cache-level": q(cache_level="Dram"),
+        "use-packed": q(use_packed=False),
+    }
+    digs = {name: v.digest() for name, v in variants.items()}
+    for name, d in digs.items():
+        assert d != base, f"changing {name} did not move the digest"
+    assert len({base, *digs.values()}) == 1 + len(digs), \
+        "distinct queries collided"
+
+
+def test_lattice_content_not_just_shape():
+    # `from_archs` axis values are indices 0..n-1 — identical for any
+    # two lists of the same length.  The digest must still tell the
+    # lists apart (it materializes every design's hardware signature).
+    a16 = [make_spatial_arch(name=f"a{i}", num_pes=p, rf_words=64,
+                             gbuf_words=2048, bits=16)
+           for i, p in enumerate((16, 64))]
+    a8 = [make_spatial_arch(name=f"a{i}", num_pes=p, rf_words=64,
+                            gbuf_words=2048, bits=8)
+          for i, p in enumerate((16, 64))]
+    assert q(space=a16).digest() != q(space=a8).digest()
+
+
+def test_constraint_policy_is_semantic():
+    from repro.search.constraints import ConstraintSet
+    pen = ConstraintSet(["area_mm2<=1e4"], policy="penalty")
+    die = ConstraintSet(["area_mm2<=1e4"], policy="death")
+    assert q(constraints=pen).digest() != q(constraints=die).digest()
+
+
+def test_schema_version_bump_moves_digest(monkeypatch):
+    base = q().digest()
+    monkeypatch.setattr(svc_mod, "SERVICE_FORMAT",
+                        svc_mod.SERVICE_FORMAT + 1)
+    assert q().digest() != base
+
+
+def test_oversized_space_is_rejected(monkeypatch):
+    monkeypatch.setattr(svc_mod, "MAX_DIGEST_ARCHS", 2)
+    with pytest.raises(ValueError, match="too large to content-digest"):
+        q().digest()
+
+
+# ---------------------------------------------------------------------------
+# admission-time validation
+# ---------------------------------------------------------------------------
+def test_strategy_instance_rejected():
+    from repro.search import make_strategy
+    inst = make_strategy("exhaustive", SPACE)
+    with pytest.raises(TypeError, match="registry name"):
+        q(strategy=inst)
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        q(strategy="definitely-not-registered")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (skipped when hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(perm=st.permutations(CONS),
+           pad=st.lists(st.booleans(), min_size=len(CONS),
+                        max_size=len(CONS)))
+    def test_hypothesis_constraint_permutations(perm, pad):
+        noisy = [c.replace("<=", "  <=  ") if p else c
+                 for c, p in zip(perm, pad)]
+        assert q(constraints=noisy).digest() == \
+            q(constraints=CONS).digest()
+
+    @settings(max_examples=20, deadline=None)
+    @given(extra=st.integers(min_value=0, max_value=10_000))
+    def test_hypothesis_budget_clamp(extra):
+        assert q(budget=SPACE.size + extra).digest() == \
+            q(budget=None).digest()

@@ -1,0 +1,117 @@
+"""Admission/recycling invariants for the continuous-batching serve
+engine (`repro.serve.engine`).
+
+The real decode path is covered by test_substrate's greedy-decode test;
+here `engine._decode` is replaced with a deterministic stub (token t
+always emits t+1, as one-hot logits) so slot bookkeeping — the part with
+no dedicated coverage — is exercised exhaustively and instantly:
+
+  * empty prompts are rejected at `submit` (regression: `_prefill_slot`
+    dereferenced `logits` before assignment);
+  * a slot is never double-assigned while its request is in flight;
+  * EOS and budget exhaustion both free the slot;
+  * `run_until_drained` terminates with every request completed once.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.serve.engine import Request, ServeEngine
+
+CFG = reduced_config("smollm-135m")
+
+
+def make_engine(batch=2, max_len=64, eos_id=-1) -> ServeEngine:
+    """Engine with a deterministic stub decode: next(t) = (t+1) % vocab,
+    returned as one-hot logits.  params are never touched."""
+    eng = ServeEngine(CFG, None, batch=batch, max_len=max_len,
+                      eos_id=eos_id)
+
+    def fake_decode(params, cache, toks, pos):
+        toks = np.asarray(toks)
+        logits = np.zeros((batch, CFG.vocab), np.float32)
+        for i, t in enumerate(toks):
+            logits[i, (int(t) + 1) % CFG.vocab] = 1.0
+        return jnp.asarray(logits), cache
+
+    eng._decode = fake_decode
+    return eng
+
+
+def prompt(*toks) -> np.ndarray:
+    return np.asarray(toks, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# regression: zero-length prompts
+# ---------------------------------------------------------------------------
+def test_empty_prompt_rejected_at_submit():
+    eng = make_engine()
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=prompt()))
+    # nothing half-admitted: the engine still drains instantly
+    assert eng.run_until_drained() == 0
+    assert eng.done == {}
+
+
+def test_single_token_prompt_is_fine():
+    eng = make_engine()
+    eng.submit(Request(rid=0, prompt=prompt(3), max_new_tokens=2))
+    eng.run_until_drained()
+    # prefill emits 4, then 5, 6 (one per budget step)
+    assert eng.done[0].out_tokens == [4, 5, 6]
+
+
+# ---------------------------------------------------------------------------
+# slot recycling
+# ---------------------------------------------------------------------------
+def test_eos_frees_slot():
+    eng = make_engine(eos_id=7)
+    # prompt ends at 5 -> prefill emits 6, first decode emits 7 == EOS
+    eng.submit(Request(rid=0, prompt=prompt(5), max_new_tokens=50))
+    ticks = eng.run_until_drained()
+    assert eng.done[0].out_tokens == [6, 7]
+    assert all(r is None for r in eng.slot_req)
+    assert ticks < 50            # EOS, not budget, ended it
+
+
+def test_budget_exhaustion_frees_slot():
+    eng = make_engine(eos_id=-1)     # unreachable: stub emits 0..vocab-1
+    eng.submit(Request(rid=0, prompt=prompt(1, 2), max_new_tokens=3))
+    eng.run_until_drained()
+    # prefill emits one token, then exactly max_new_tokens decodes
+    assert eng.done[0].out_tokens == [3, 4, 5, 6]
+    assert all(r is None for r in eng.slot_req)
+
+
+def test_slot_never_double_assigned():
+    eng = make_engine(batch=2)
+    n_req = 5
+    for rid in range(n_req):
+        eng.submit(Request(rid=rid, prompt=prompt(1 + rid),
+                           max_new_tokens=3))
+    ticks = 0
+    while (eng.pending or any(r is not None for r in eng.slot_req)) \
+            and ticks < 200:
+        active = [r.rid for r in eng.slot_req if r is not None]
+        assert len(active) == len(set(active)), "slot double-assigned"
+        assert len(active) <= eng.batch
+        eng.step()
+        ticks += 1
+    assert ticks < 200
+    # every request completed exactly once
+    assert sorted(eng.done) == list(range(n_req))
+    assert all(len(eng.done[r].out_tokens) == 4 for r in range(n_req))
+
+
+def test_run_until_drained_terminates_with_single_slot():
+    eng = make_engine(batch=1)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=prompt(2, 3),
+                           max_new_tokens=2))
+    ticks = eng.run_until_drained()
+    assert ticks < 10_000
+    assert sorted(eng.done) == [0, 1, 2]
+    assert not eng.pending
+    assert all(r is None for r in eng.slot_req)
