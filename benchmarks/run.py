@@ -28,6 +28,7 @@ MODULES = [
     ("bench_mapspace_throughput", {"max_mappings": 20000}),
     ("bench_backend_dispatch", {"max_mappings": 2000}),
     ("bench_search_strategies", {"max_mappings": 800}),
+    ("bench_mix_search", {"max_mappings": 1200}),
     ("bench_pipeline_overlap", {"max_mappings": 2000}),
     ("bench_trim_planner", {}),
     ("bench_obs", {"max_mappings": 1500}),

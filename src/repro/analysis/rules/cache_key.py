@@ -42,11 +42,13 @@ TRACKED = {
     "Workload": ("core/workload.py", {"wl", "workload", "w"}),
     "HardwareDesc": ("core/designer.py", {"hw", "hardware", "hwd"}),
     "MapperConfig": ("core/mapper.py", {"cfg", "config", "mapper_cfg"}),
+    "MixDesc": ("core/scheduler.py", {"mix", "mix_desc", "mixdesc"}),
 }
 
 #: modules whose attribute reads count as "scoring consumes this field"
 CONSUMERS = ("core/evaluator.py", "core/backend.py",
-             "core/mapspace_array.py", "core/mapper.py")
+             "core/mapspace_array.py", "core/mapper.py",
+             "core/scheduler.py")
 
 #: deliberate key exclusions, with rationale (documented, not baselined)
 EXEMPT: Dict[str, Dict[str, str]] = {
@@ -61,6 +63,10 @@ EXEMPT: Dict[str, Dict[str, str]] = {
                 "entries (see _hw_sig)",
     },
     "MapperConfig": {},
+    "MixDesc": {
+        "name": "cosmetic, like HardwareDesc.name; mix identity is the "
+                "members tuple (see _mix_sig)",
+    },
 }
 
 SCHEMA_FILE = Path(__file__).resolve().parents[1] / "cache_key_schema.json"

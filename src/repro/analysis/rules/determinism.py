@@ -32,13 +32,20 @@ from . import register_rule
 
 SCORING_MODULES = ("core/evaluator.py", "core/mapper.py",
                    "core/mapspace_array.py", "core/backend.py",
-                   "core/batch_eval.py")
+                   "core/batch_eval.py",
+                   # the mix scheduler elects layer->member assignments
+                   # on the scoring path: any RNG or wall-clock leak
+                   # would make mix winners run-dependent
+                   "core/scheduler.py")
 STRATEGY_MODULES = ("search/strategies.py",)
 
 #: digest closure roots: (module relpath, function qualname)
 DIGEST_ROOTS = (("search/cache.py", "cache_key"),
                 ("search/constraints.py", "ConstraintSet.digest"),
                 ("core/mapspace_array.py", "PackedMapspace.digest"),
+                # the mix composition digest partitions the cache
+                # namespace per mix — same determinism bar as cache_key
+                ("search/cache.py", "mix_digest"),
                 # the DSE service's request-coalescing identity: two
                 # submits share a job iff these digests are equal, so it
                 # is held to the same determinism bar as the cache key

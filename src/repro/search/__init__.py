@@ -3,6 +3,9 @@
 Layers on top of repro.core's Algorithm-1 machinery:
 
   space          ArchSpace lattice over architecture parameters
+  mix            MixSpace: heterogeneous accelerator-mix lattices whose
+                 points are MixDesc tuples (core.scheduler assigns
+                 layers/phases to members)
   strategies     Strategy registry: exhaustive | random | anneal | evolve
                  | bandit | hv-evolve
   pareto         ParetoFront over (cycles, energy, area[, edp]),
@@ -17,10 +20,12 @@ Layers on top of repro.core's Algorithm-1 machinery:
 `run_search(strategy="exhaustive")`.
 """
 from .batch_frontier import JobBest, MapspaceJob, fused_best, per_arch_best
-from .cache import ResultCache, cache_key, decode_result, encode_result
+from .cache import (ResultCache, cache_key, decode_result, encode_result,
+                    mix_digest)
 from .constraints import METRICS, Constraint, ConstraintSet
 from .driver import (SearchReport, SkippedArch, auto_round_size,
                      run_search)
+from .mix import MixSpace
 from .pareto import (DEFAULT_OBJECTIVES, OBJECTIVES, ParetoFront,
                      ParetoPoint, dominates, hypervolume, non_dominated,
                      normalize_values, objective_values, ref_from_values,

@@ -34,10 +34,12 @@ from ..core.designer import HardwareDesc
 from ..core.evaluator import Estimate
 from ..core.mapper import MapperConfig
 from ..core.mapping import Mapping
+from ..core.scheduler import SCHEDULER_FORMAT, MixDesc
 from ..core.workload import Workload
 
-CACHE_FORMAT = 4        # v4: constraints digest joined the key scheme
-#                         (v3: packed-mapspace digest)
+CACHE_FORMAT = 5        # v5: heterogeneous-mix digest joined the key
+#                         scheme (v4: constraints digest; v3:
+#                         packed-mapspace digest)
 GC_LOCK = ".gc.lock"    # cross-process guard for the disk-tier GC
 GC_LOCK_STALE_S = 600.0  # a lock older than this is a dead process's
 
@@ -69,11 +71,33 @@ def _cfg_sig(cfg: MapperConfig) -> Dict[str, Any]:
     return d
 
 
+def _mix_sig(mix: MixDesc) -> Dict[str, Any]:
+    # The mix `name` is cosmetic and excluded (like `HardwareDesc.name`);
+    # member *order* stays — it is the scheduler's member index space.
+    # SCHEDULER_FORMAT rides along so a change to assignment/combination
+    # semantics invalidates every member sub-result at once.
+    return {"members": [_hw_sig(m) for m in mix.members],
+            "scheduler": SCHEDULER_FORMAT}
+
+
+def mix_digest(mix: MixDesc) -> str:
+    """Content digest of a mix's composition — passed as `cache_key`'s
+    `mix=` component for every member sub-job, so mix-context entries
+    can never alias single-arch entries (or entries from a different
+    mix): the per-workload winner is the same either way today, but the
+    namespace partition keeps future mix-aware mapping selection (e.g.
+    scoring against a member's *contended* shared bandwidth) correct
+    for free."""
+    blob = json.dumps(_mix_sig(mix), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
               goal: str, scorer: str = "per-arch",
               backend: str = "jnp",
               mapspace: Optional[str] = None,
-              constraints: Optional[str] = None) -> str:
+              constraints: Optional[str] = None,
+              mix: Optional[str] = None) -> str:
     """`scorer` is the selection path ("per-arch" seed semantics vs
     "fused" cross-arch batching) and `backend` the scoring engine ("jnp"
     oracle vs "pallas" mapspace kernel — pass the *resolved* engine, not
@@ -94,13 +118,19 @@ def cache_key(wl: Workload, hw: HardwareDesc, cfg: MapperConfig,
     network-level budgets today, but the digest still partitions the
     namespace so constrained and unconstrained runs (or runs under
     different budgets) can never alias — future constraint-aware mapping
-    selection gets correctness for free."""
+    selection gets correctness for free.
+
+    `mix` is the `mix_digest` of the enclosing heterogeneous mix when
+    this (workload, hw) sub-job belongs to one (None for single-arch
+    runs): mix-context entries and single-arch entries never alias."""
     payload = {"v": CACHE_FORMAT, "workload": _workload_sig(wl),
                "hw": _hw_sig(hw), "cfg": _cfg_sig(cfg), "goal": goal,
                "scorer": scorer, "backend": backend,
                "constraints": constraints}
     if mapspace is not None:
         payload["mapspace"] = mapspace
+    if mix is not None:
+        payload["mix"] = mix
     blob = json.dumps(payload, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()
 

@@ -30,13 +30,15 @@ from ..core.explorer import (ArchResult, WorkloadResult,
 from ..core.mapper import MapperConfig, build_mapspace
 from ..core.mapspace_array import build_packed_mapspace
 from ..core.evaluator import evaluate_mapping
+from ..core.scheduler import MixDesc, MixResult, schedule_network
 from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..core.workload import TENSORS
 from ..obs import (MANIFEST_DIR, ConsoleSink, ProgressStream, activate,
                    as_stream, as_tracer, build_manifest)
 from .batch_frontier import (MapspaceJob, fused_best, fused_collect,
                              fused_launch, per_arch_best)
-from .cache import ResultCache, cache_key, decode_result, encode_result
+from .cache import (ResultCache, cache_key, decode_result, encode_result,
+                    mix_digest)
 from .constraints import ConstraintSet
 from .pareto import (DEFAULT_OBJECTIVES, ParetoFront, hypervolume,
                      objective_values, ref_from_values)
@@ -201,7 +203,9 @@ class _RoundPlan:
     identical to the sequential path)."""
     batch: List[Coords]
     decoded: Dict[Tuple[Coords, str], WorkloadResult]
-    keymaps: Dict[Coords, List[str]]
+    # single-arch coords map to one key per workload; mix coords map to
+    # one key list per *member* (List[List[str]])
+    keymaps: Dict[Coords, Any]
     jobs: List[MapspaceJob]
     meta: Dict[Tuple[Coords, str], Tuple[int, int]]
     skipped: Dict[Coords, "SkippedArch"]
@@ -275,11 +279,14 @@ class _Evaluator:
         }
 
     def _mapspace_and_key(self, coords: Coords, hw, wl, memo: Dict,
-                          plan: _RoundPlan):
+                          plan: _RoundPlan, mix: Optional[str] = None):
         """-> (packed_or_none, key).  The packed pipeline builds the
         arrays first (cheap, vectorized) and keys the cache on their
-        content digest; the legacy pipeline keys on config alone."""
-        wk = (coords, _wl_key(wl))
+        content digest; the legacy pipeline keys on config alone.  For
+        a mix member sub-job, `mix` carries the composition digest
+        (replicated members are one object, so `id(hw)` dedupes their
+        builds within the round)."""
+        wk = (coords, id(hw), _wl_key(wl))
         if wk in memo:
             return memo[wk]
         if self.packed:
@@ -288,12 +295,12 @@ class _Evaluator:
             k = cache_key(wl, hw, self.cfg, self.goal,
                           scorer=self.batching, backend=self.backend,
                           mapspace=pm.digest(),
-                          constraints=self._cdigest)
+                          constraints=self._cdigest, mix=mix)
         else:
             pm = None
             k = cache_key(wl, hw, self.cfg, self.goal,
                           scorer=self.batching, backend=self.backend,
-                          constraints=self._cdigest)
+                          constraints=self._cdigest, mix=mix)
         memo[wk] = (pm, k)
         return pm, k
 
@@ -326,48 +333,20 @@ class _Evaluator:
             sp.set(skipped=len(skipped))
 
         # pass 1b: cache consult (pack/validate spans come from the
-        # mapspace builders); collect mapspace jobs for the misses
+        # mapspace builders); collect mapspace jobs for the misses.  A
+        # MixDesc point fans out into per-(member, workload) sub-jobs
+        # that ride the same tag-dedupe, cache, and fused batching —
+        # identical replicated members share jobs via identical keys.
         for coords, hw in survivors:
-            keys: List[str] = []
-            for wl in self.workloads.intra:
-                pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo,
-                                               plan)
-                keys.append(k)
-                tag = (coords, k)
-                if tag in decoded or tag in meta:
-                    continue            # repeated layer within this arch
-                with tr.span("cache-get", phase=True) as cs:
-                    entry = self.cache.get(k)
-                    if entry is not None:
-                        decoded[tag] = decode_result(entry, wl, hw)
-                        cs.set(hit=True)
-                if entry is not None:
-                    if self.stream.active:
-                        plan.events.append(dict(hit=True, arch=hw.name,
-                                                workload=wl.name))
-                    continue
-                if self.stream.active:
-                    plan.events.append(dict(hit=False, arch=hw.name,
-                                            workload=wl.name))
-                plan.n_enumerations += 1
-                if pm is not None:
-                    if not len(pm):
-                        raise RuntimeError(
-                            f"empty valid mapspace for {wl.name} "
-                            f"on {hw.name}")
-                    jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
-                                            packed=pm))
-                    meta[tag] = (pm.total_candidates, pm.n_valid)
-                else:
-                    space_ = build_mapspace(wl, hw, self.cfg)
-                    if not space_.mappings:
-                        raise RuntimeError(
-                            f"empty valid mapspace for {wl.name} "
-                            f"on {hw.name}")
-                    jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
-                                            mappings=space_.mappings))
-                    meta[tag] = (space_.total_candidates, space_.n_valid)
-            keymaps[coords] = keys
+            if isinstance(hw, MixDesc):
+                mdig = mix_digest(hw)
+                keymaps[coords] = [
+                    self._consult_unit(coords, member, ms_memo, plan,
+                                       mix=mdig)
+                    for member in hw.members]
+            else:
+                keymaps[coords] = self._consult_unit(coords, hw,
+                                                     ms_memo, plan)
 
         plan.n_rows = sum(j.n_rows() for j in jobs)
         # only architectures that actually contributed jobs — counting
@@ -375,6 +354,55 @@ class _Evaluator:
         # inflate the auto round size
         plan.n_archs_scored = len({j.tag[0] for j in jobs})
         return plan
+
+    def _consult_unit(self, coords: Coords, hw, ms_memo: Dict,
+                      plan: _RoundPlan,
+                      mix: Optional[str] = None) -> List[str]:
+        """Cache consult + job collection for one hardware unit (a
+        single arch, or one member of a mix) over every workload;
+        -> the unit's per-workload cache keys."""
+        tr = self.tracer
+        decoded, jobs, meta = plan.decoded, plan.jobs, plan.meta
+        keys: List[str] = []
+        for wl in self.workloads.intra:
+            pm, k = self._mapspace_and_key(coords, hw, wl, ms_memo,
+                                           plan, mix=mix)
+            keys.append(k)
+            tag = (coords, k)
+            if tag in decoded or tag in meta:
+                continue                # repeated layer within this arch
+            with tr.span("cache-get", phase=True) as cs:
+                entry = self.cache.get(k)
+                if entry is not None:
+                    decoded[tag] = decode_result(entry, wl, hw)
+                    cs.set(hit=True)
+            if entry is not None:
+                if self.stream.active:
+                    plan.events.append(dict(hit=True, arch=hw.name,
+                                            workload=wl.name))
+                continue
+            if self.stream.active:
+                plan.events.append(dict(hit=False, arch=hw.name,
+                                        workload=wl.name))
+            plan.n_enumerations += 1
+            if pm is not None:
+                if not len(pm):
+                    raise RuntimeError(
+                        f"empty valid mapspace for {wl.name} "
+                        f"on {hw.name}")
+                jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
+                                        packed=pm))
+                meta[tag] = (pm.total_candidates, pm.n_valid)
+            else:
+                space_ = build_mapspace(wl, hw, self.cfg)
+                if not space_.mappings:
+                    raise RuntimeError(
+                        f"empty valid mapspace for {wl.name} "
+                        f"on {hw.name}")
+                jobs.append(MapspaceJob(tag=tag, hw=hw, workload=wl,
+                                        mappings=space_.mappings))
+                meta[tag] = (space_.total_candidates, space_.n_valid)
+        return keys
 
     def absorb(self, plan: _RoundPlan) -> None:
         """Fold a plan's counters into the report and flush its deferred
@@ -458,6 +486,20 @@ class _Evaluator:
         with tr.span("assemble", phase=True,
                      archs=len(plan.survivors)):
             for coords, hw in plan.survivors:
+                if isinstance(hw, MixDesc):
+                    # every workload was mapped on every member; the
+                    # scheduler picks the layer->member assignment and
+                    # combines per-member networks (max cycles, summed
+                    # energy/area)
+                    results_by_member = [
+                        [dataclasses.replace(decoded[(coords, k)],
+                                             workload=wl)
+                         for wl, k in zip(self.workloads.intra, keys)]
+                        for keys in plan.keymaps[coords]]
+                    out[coords] = schedule_network(
+                        hw, results_by_member, self.workloads,
+                        cache_level=self.cache_level, goal=self.goal)
+                    continue
                 results = [
                     dataclasses.replace(decoded[(coords, k)], workload=wl)
                     for wl, k in zip(self.workloads.intra,
@@ -807,6 +849,17 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                 if c in fresh_set:
                     report.n_evaluated += 1
                     report.all_archs.append(res)
+                    row_extra = {}
+                    if isinstance(res, MixResult):
+                        # mix-aware rows: the composition and the
+                        # scheduler's chosen layer->member assignment
+                        # land in the report (and the bench claim)
+                        row_extra = {
+                            "members": [m.name
+                                        for m in res.hardware.members],
+                            "assignment": list(res.assignment),
+                            "utilization": list(
+                                res.network.utilization)}
                     if feasible:
                         report.n_feasible += 1
                         front_n = len(report.pareto)
@@ -824,7 +877,8 @@ def run_search(task: Union[TaskDescription, TaskWorkloads],
                     report.history.append({
                         "step": report.n_evaluated, "coords": c,
                         "arch": res.hardware.name, "value": val,
-                        "objectives": obj_vals, "feasible": feasible})
+                        "objectives": obj_vals, "feasible": feasible,
+                        **row_extra})
                     _observe(c, obj_vals, feasible)
                     n = res.network
                     stream.emit("arch-evaluated",

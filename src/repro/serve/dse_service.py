@@ -41,6 +41,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from ..core.mapper import MapperConfig
+from ..core.scheduler import SCHEDULER_FORMAT, MixDesc
 from ..core.task_analyst import TaskDescription, TaskWorkloads, analyze
 from ..obs import (MANIFEST_DIR, EventCursor, ProgressEvent, ProgressStream,
                    ReplaySink, activate, as_tracer, build_manifest)
@@ -53,7 +54,8 @@ from ..search.strategies import STRATEGIES
 
 #: request-digest schema version — bump on any change to
 #: `SearchQuery.signature()` so old and new digests never alias
-SERVICE_FORMAT = 1
+#: (v2: heterogeneous-mix point signatures joined `_space_sig`)
+SERVICE_FORMAT = 2
 
 #: `_space_sig` materializes the hardware signature of every lattice
 #: point (the axes alone don't pin `ArchSpace.from_archs` builders, whose
@@ -70,11 +72,26 @@ FAILED = "failed"
 _UNSET = object()
 
 
+def _point_sig(hw) -> Dict[str, Any]:
+    """Content identity of one design point.  A heterogeneous mix
+    canonicalizes its member *order* (the scheduler may assign work to
+    any member, and swapping two members permutes assignments without
+    changing any reachable outcome), so two mixes listing the same
+    members in different orders coalesce; `SCHEDULER_FORMAT` rides
+    along so a semantics change never aliases old digests."""
+    if isinstance(hw, MixDesc):
+        members = sorted(
+            (_hw_sig(m) for m in hw.members),
+            key=lambda sig: json.dumps(sig, sort_keys=True))
+        return {"mix": members, "scheduler": SCHEDULER_FORMAT}
+    return _hw_sig(hw)
+
+
 def _space_sig(space: ArchSpace) -> Dict[str, Any]:
     """Content identity of an architecture lattice: the axes plus the
-    full hardware signature of every design point.  Unlike
-    `obs.manifest.space_digest` (axis names + repr'd values — fine for
-    provenance), this is *content*-sensitive even for
+    full point signature of every design (hardware, or canonicalized
+    mix).  Unlike `obs.manifest.space_digest` (axis names + repr'd
+    values — fine for provenance), this is *content*-sensitive even for
     `ArchSpace.from_archs`, whose axis values are plain indices."""
     if space.size > MAX_DIGEST_ARCHS:
         raise ValueError(
@@ -83,7 +100,7 @@ def _space_sig(space: ArchSpace) -> Dict[str, Any]:
             f"MAX_DIGEST_ARCHS")
     axes = {n: [str(v) for v in vals]
             for n, vals in zip(space.axis_names, space.axis_values)}
-    archs = [_hw_sig(space.at(c)) for c in space.all_coords()]
+    archs = [_point_sig(space.at(c)) for c in space.all_coords()]
     return {"axes": axes, "archs": archs}
 
 

@@ -33,9 +33,9 @@ REPO = Path(__file__).resolve().parents[1]
 # Changing either literal requires a CACHE_FORMAT bump in search/cache.py
 # and a re-pin via `python -m repro.analysis --update-schema` (see module
 # docstring).
-EXPECTED_CACHE_FORMAT = 4
+EXPECTED_CACHE_FORMAT = 5
 EXPECTED_SCHEMA_HASH = (
-    "2b6e5b259996253b67fbb8749458a2720e90f6d6f4ade8f8979c7afd1757615b")
+    "26464acd9853920ce4fe7498f6ec9993456f2acb253094681ce661e40e319b55")
 
 
 def test_key_schema_is_pinned():

@@ -152,8 +152,8 @@ def test_constrained_and_unconstrained_entries_never_alias():
 
 
 def test_cache_format_bump_roundtrip(tmp_path):
-    """v4 entries round-trip; pre-bump (v3) disk entries are dead."""
-    assert CACHE_FORMAT == 4
+    """v5 entries round-trip; pre-bump (v4) disk entries are dead."""
+    assert CACHE_FORMAT == 5
     hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=4096,
                            bits=16)
     wl = analyze(TASK).intra[0]

@@ -1,0 +1,186 @@
+"""Parity pins for heterogeneous-mix search.
+
+A 1-member `MixSpace` exposes *exactly* the base lattice's axes (same
+names, same values — so every strategy's seeded RNG stream is drawn
+identically) and each point builds a singleton `MixDesc` whose schedule
+is the whole network on that one member.  The contract pinned here is
+that such a search is **bit-identical** to the plain single-arch
+`run_search` across every registered strategy and multiple seeds:
+
+  * per-row history fingerprints (step, coords, value, objectives,
+    feasibility) — the arch *name* is the one cosmetic difference
+    (`mix[...]` wrapper) and is deliberately excluded;
+  * the winner: coords, goal value, every combined network metric, and
+    the chosen per-workload mapping factors;
+  * the hypervolume curve (same objective tuples -> same fronts).
+
+Cache-wise, mix member sub-results live in a *different* key partition
+than single-arch results (the mix composition digest is part of the
+payload, CACHE_FORMAT v5) — a mix search against a warm single-arch
+cache must not hit, and vice versa.  The sensitivity sweep mirrors
+tests/test_cache.py's style.
+"""
+import pytest
+
+from repro.core import (Conv2D, FC, MapperConfig, Pool2D,
+                        TaskDescription, analyze, make_mix,
+                        make_spatial_arch)
+from repro.search import (ArchSpace, MixSpace, ResultCache, STRATEGIES,
+                          cache_key, mix_digest, run_search)
+
+CFG = MapperConfig(max_mappings=150, seed=0)
+
+TASK = TaskDescription(
+    name="parity-tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+
+BASE = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64,),
+                         gbuf_words=(2048, 8192), bits=16)
+
+ALL_STRATEGIES = sorted(STRATEGIES)
+
+
+def _fingerprint(report):
+    return [(row["step"], tuple(row["coords"]), row["value"],
+             tuple(row["objectives"] or ()), row["feasible"])
+            for row in report.history]
+
+
+def _run(space, strategy, seed, **kw):
+    return run_search(TASK, space, goal="edp", strategy=strategy,
+                      cfg=CFG, seed=seed, budget=4, round_size=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical parity, every strategy x seeds
+# ---------------------------------------------------------------------------
+def test_one_member_space_exposes_base_axes():
+    m = MixSpace(BASE)
+    assert m.axis_names == BASE.axis_names
+    assert m.axis_values == BASE.axis_values
+    assert m.size == BASE.size
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_one_member_mix_parity(strategy, seed):
+    single = _run(BASE, strategy, seed)
+    mixed = _run(MixSpace(BASE), strategy, seed)
+
+    assert _fingerprint(single) == _fingerprint(mixed)
+    assert single.best_coords == mixed.best_coords
+    assert single.goal_value() == mixed.goal_value()
+    assert single.hypervolume_curve() == mixed.hypervolume_curve()
+
+    ns, nm = single.best.network, mixed.best.network
+    for f in ("cycles", "dynamic_pj", "static_pj", "cache_static_pj",
+              "energy_pj", "edp", "area_mm2", "preproc_cycles"):
+        assert getattr(ns, f) == getattr(nm, f), f
+    # the singleton wrapper is the only cosmetic difference
+    assert mixed.best.hardware.name == f"mix[{single.best.hardware.name}]"
+    assert mixed.best.hardware.members[0].name == \
+        single.best.hardware.name
+    # same chosen mappings, workload for workload
+    for rs, rm in zip(single.best.per_workload, mixed.best.per_workload):
+        assert rs.mapping.factors == rm.mapping.factors
+        assert rs.estimate.cycles == rm.estimate.cycles
+
+
+def test_one_member_parity_with_constraints():
+    kw = dict(constraints=["area_mm2<=1e9", "energy_pj<=1e15"])
+    single = _run(BASE, "exhaustive", 0, **kw)
+    mixed = _run(MixSpace(BASE), "exhaustive", 0, **kw)
+    assert _fingerprint(single) == _fingerprint(mixed)
+    assert single.goal_value() == mixed.goal_value()
+
+
+def test_mix_history_rows_carry_schedule_fields():
+    report = _run(MixSpace(BASE, slots=2, counts=((1, 1),),
+                           shared_bw_level="DRAM"),
+                  "exhaustive", 0)
+    fresh = [r for r in report.history if r["objectives"] is not None]
+    assert fresh
+    n_workloads = len(analyze(TASK).intra)
+    for row in fresh:
+        assert len(row["members"]) == 2
+        assert len(row["assignment"]) == n_workloads
+        assert all(m in (0, 1) for m in row["assignment"])
+        assert len(row["utilization"]) == 2
+        assert max(row["utilization"]) == 1.0
+    # single-arch rows don't grow the mix fields
+    plain = _run(BASE, "exhaustive", 0)
+    assert all("assignment" not in r for r in plain.history)
+
+
+# ---------------------------------------------------------------------------
+# cache partition: mix entries never alias single-arch entries
+# ---------------------------------------------------------------------------
+def test_mix_and_single_arch_keys_never_alias():
+    hw = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=2048,
+                           bits=16)
+    wl = analyze(TASK).intra[0]
+    d1 = mix_digest(make_mix((hw,)))
+    k_plain = cache_key(wl, hw, CFG, "edp")
+    k_mix = cache_key(wl, hw, CFG, "edp", mix=d1)
+    assert k_plain != k_mix
+    # sensitivity sweep over the digest itself
+    big = make_spatial_arch(num_pes=64, rf_words=64, gbuf_words=8192,
+                            bits=16)
+    variants = {
+        "singleton": mix_digest(make_mix((hw,))),
+        "pair": mix_digest(make_mix((hw, big))),
+        "pair-flipped": mix_digest(make_mix((big, hw))),   # member order
+        "replicated": mix_digest(make_mix((hw, hw))),      # = schedule slots
+    }
+    assert len(set(variants.values())) == len(variants)
+    # cosmetic mix name does NOT move the digest
+    assert mix_digest(make_mix((hw, big), name="a")) == \
+        mix_digest(make_mix((hw, big), name="b"))
+    # distinct digests -> distinct keys, same digest -> same key
+    keys = {k: cache_key(wl, hw, CFG, "edp", mix=v)
+            for k, v in variants.items()}
+    assert len(set(keys.values())) == len(keys)
+    assert cache_key(wl, hw, CFG, "edp", mix=variants["pair"]) == \
+        keys["pair"]
+
+
+def test_warm_single_arch_cache_gives_mix_no_hits(tmp_path):
+    """Round-trip through a real on-disk cache: warm it with the
+    single-arch search, then run the 1-member mix search against the
+    same cache — equal results, zero hits (separate partitions), and a
+    mix re-run hits only its own entries."""
+    cache = str(tmp_path / "cache")
+    single = _run(BASE, "exhaustive", 0, cache=cache)
+    assert single.n_cache_hits == 0
+
+    mixed = _run(MixSpace(BASE), "exhaustive", 0, cache=cache)
+    assert mixed.n_cache_hits == 0          # never aliases
+    assert _fingerprint(single) == _fingerprint(mixed)
+
+    again = _run(MixSpace(BASE), "exhaustive", 0, cache=cache)
+    assert again.n_cache_hits > 0           # its own partition is warm
+    assert _fingerprint(again) == _fingerprint(mixed)
+
+    warm_single = _run(BASE, "exhaustive", 0, cache=cache)
+    assert warm_single.n_cache_hits > 0
+    assert _fingerprint(warm_single) == _fingerprint(single)
+
+
+def test_het_mix_cache_roundtrip(tmp_path):
+    """A genuinely heterogeneous search round-trips through the cache
+    bit-identically (warm == cold), and its entries are invisible to
+    the equivalent homogeneous searches."""
+    cache = str(tmp_path / "cache")
+    space = MixSpace(BASE, slots=2, counts=((1, 1),),
+                     shared_bw_level="DRAM")
+    cold = _run(space, "exhaustive", 0, cache=cache)
+    assert cold.n_cache_hits == 0
+    warm = _run(space, "exhaustive", 0, cache=cache)
+    assert warm.n_cache_hits > 0
+    assert _fingerprint(cold) == _fingerprint(warm)
+    assert cold.best.assignment == warm.best.assignment
+    single = _run(BASE, "exhaustive", 0, cache=cache)
+    assert single.n_cache_hits == 0

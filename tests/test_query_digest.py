@@ -20,14 +20,16 @@ is installed — the pattern of tests/test_pareto_hv.py.
 """
 import dataclasses
 import random
+import threading
+import types
 
 import pytest
 
 from repro.core import (Conv2D, FC, MapperConfig, Pool2D, TaskDescription,
-                        analyze, make_spatial_arch)
-from repro.search import ArchSpace
+                        analyze, make_mix, make_spatial_arch)
+from repro.search import ArchSpace, MixSpace
 from repro.serve import dse_service as svc_mod
-from repro.serve.dse_service import SearchQuery
+from repro.serve.dse_service import DSEService, SearchQuery
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -169,6 +171,92 @@ def test_oversized_space_is_rejected(monkeypatch):
     monkeypatch.setattr(svc_mod, "MAX_DIGEST_ARCHS", 2)
     with pytest.raises(ValueError, match="too large to content-digest"):
         q().digest()
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous mixes
+# ---------------------------------------------------------------------------
+MEM_A = make_spatial_arch(name="memA", num_pes=16, rf_words=64,
+                          gbuf_words=2048, bits=16)
+MEM_B = make_spatial_arch(name="memB", num_pes=64, rf_words=64,
+                          gbuf_words=8192, bits=16)
+
+
+def test_mix_member_order_is_canonicalized():
+    """Member order is a scheduler-internal index space, not query
+    semantics: the same composition in any order must coalesce."""
+    fwd = [make_mix((MEM_A, MEM_B))]
+    rev = [make_mix((MEM_B, MEM_A))]
+    assert q(space=fwd).digest() == q(space=rev).digest()
+
+
+def test_mix_name_is_cosmetic():
+    assert q(space=[make_mix((MEM_A, MEM_B), name="x")]).digest() == \
+        q(space=[make_mix((MEM_A, MEM_B), name="y")]).digest()
+
+
+def test_mix_semantics_move_the_digest():
+    base = q(space=[make_mix((MEM_A, MEM_B))]).digest()
+    variants = {
+        # a mix of one member is NOT the bare design: it runs through
+        # the scheduler and lives in its own cache partition
+        "singleton-vs-bare": q(space=[MEM_A]),
+        "singleton-mix": q(space=[make_mix((MEM_A,))]),
+        "replication": q(space=[make_mix((MEM_A, MEM_A, MEM_B))]),
+        "member-content": q(space=[make_mix((
+            MEM_A, make_spatial_arch(name="memB", num_pes=64,
+                                     rf_words=64, gbuf_words=8192,
+                                     bits=8)))]),
+        "shared-bw": q(space=[make_mix((MEM_A, MEM_B),
+                                       shared_bw_level="DRAM")]),
+    }
+    digs = {name: v.digest() for name, v in variants.items()}
+    for name, d in digs.items():
+        assert d != base, f"{name} did not move the digest"
+    assert len({base, *digs.values()}) == 1 + len(digs)
+
+
+def test_mix_space_lattice_digests():
+    """A MixSpace query digests every materialized mix point; counts
+    axis and slot contents are semantic."""
+    base = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64,),
+                             gbuf_words=(2048,), bits=16)
+    one = q(space=MixSpace(base, slots=2, counts=((1, 1),)))
+    two = q(space=MixSpace(base, slots=2, counts=((1, 1), (2, 1))))
+    bw = q(space=MixSpace(base, slots=2, counts=((1, 1),),
+                          shared_bw_level="DRAM"))
+    assert len({one.digest(), two.digest(), bw.digest()}) == 3
+
+
+def test_same_mix_queries_coalesce(monkeypatch):
+    """End-to-end through DSEService: two submits whose mixes differ
+    only in member order (and cosmetic name) share one job."""
+    gate = threading.Event()
+    calls = []
+
+    def spy(*args, **kw):
+        calls.append(1)
+        assert gate.wait(timeout=60.0)
+        best = types.SimpleNamespace(
+            hardware=types.SimpleNamespace(name="fk"))
+        return types.SimpleNamespace(
+            cancelled=False, best=best, goal_value=lambda: 1.0,
+            n_evaluated=1, pareto=(), wall_time_s=0.0,
+            manifest=types.SimpleNamespace(run_id="run-fake"))
+
+    monkeypatch.setattr(svc_mod, "run_search", spy)
+    with DSEService(workers=2) as svc:
+        t1 = svc.submit(q(space=[make_mix((MEM_A, MEM_B), name="x")]))
+        t2 = svc.submit(q(space=[make_mix((MEM_B, MEM_A), name="y")]))
+        t3 = svc.submit(q(space=[make_mix((MEM_A, MEM_A, MEM_B))]))
+        assert t1.digest == t2.digest
+        assert t3.digest != t1.digest
+        snap = svc.snapshot()
+        assert snap["admitted"] == 2 and snap["coalesced"] == 1
+        gate.set()
+        for t in (t1, t2, t3):
+            t.result(timeout=60.0)
+        assert len(calls) == 2
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,291 @@
+"""Oracle tests for `core.scheduler` — the heterogeneous-mix network
+scheduler.
+
+The scheduler's exact regime (`members ** workloads <= exact_limit`)
+claims to return the goal-argmin over *all* layer→member assignments
+with a lexicographic tie-break.  These tests re-derive that argmin by
+brute force through the public `mix_estimate_for_assignment` API on
+tiny nets (<=4 workloads, <=3 members) and require bit-identical
+agreement — both the chosen assignment and every combined metric.
+
+Also pinned here:
+
+  * hand-computed combination semantics on micro cases (mix cycles =
+    max over members, energy/area = sums, idle members contribute no
+    dynamic energy but still leak);
+  * the 1-member anchor: a singleton mix equals a direct
+    `evaluate_network` of the same results, bit for bit;
+  * phase-aware training scheduling: FW/BW/WG phase workloads are
+    independent assignment slots, and the exact argmin over them is
+    what `schedule_network` returns;
+  * the greedy/hill-climb regime (forced via `exact_limit=1`) stays
+    deterministic and within the exact optimum on re-runs.
+
+A hypothesis-gated property variant fuzzes member shapes and goals.
+"""
+import dataclasses
+import itertools
+
+import pytest
+
+from repro.core import (Conv2D, FC, MapperConfig, MixDesc, Pool2D,
+                        TaskDescription, analyze, evaluate_network,
+                        make_mix, make_spatial_arch,
+                        mix_estimate_for_assignment, schedule_network)
+from repro.core.explorer import find_optimal_mapping
+from repro.core.scheduler import _member_buffer_words
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+CFG = MapperConfig(max_mappings=150, seed=0)
+
+TASK = TaskDescription(
+    name="sched-tiny", input_shape=(8, 8, 3), batch_size=2,
+    processing_type="Inference",
+    layers=(Conv2D(8, (3, 3), (1, 1), (1, 1), name="c1"),
+            Pool2D((2, 2), (2, 2), name="p1"),
+            FC(10, name="fc")))
+
+TRAIN_TASK = TaskDescription(
+    name="sched-train", input_shape=(6, 6, 3), batch_size=2,
+    processing_type="Training",
+    layers=(Conv2D(4, (3, 3), (1, 1), (1, 1), name="c1"),
+            FC(6, name="fc")))
+
+SMALL = make_spatial_arch(num_pes=16, rf_words=64, gbuf_words=2048,
+                          bits=16)
+BIG = make_spatial_arch(num_pes=64, rf_words=64, gbuf_words=8192,
+                        bits=16)
+MID = make_spatial_arch(num_pes=32, rf_words=64, gbuf_words=4096,
+                        bits=16)
+
+
+def _results_by_member(mix, workloads, cfg=CFG, goal="edp"):
+    return [[find_optimal_mapping(wl, hw, cfg, goal)
+             for wl in workloads.intra]
+            for hw in mix.members]
+
+
+def _oracle(mix, results_by_member, workloads, goal):
+    """Brute-force argmin over every assignment; first (lexicographically
+    smallest) assignment wins ties — the scheduler's documented
+    contract."""
+    n = len(workloads.intra)
+    k = mix.n_members
+    best_a, best_v = None, float("inf")
+    for a in itertools.product(range(k), repeat=n):
+        est = mix_estimate_for_assignment(mix, results_by_member,
+                                          workloads, a)
+        if goal == "latency":
+            v = est.cycles
+        elif goal == "energy":
+            v = est.energy_pj
+        else:
+            v = est.edp
+        if v < best_v:
+            best_a, best_v = a, v
+    return best_a, best_v
+
+
+# ---------------------------------------------------------------------------
+# exact regime == brute-force oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("goal", ["edp", "latency", "energy"])
+@pytest.mark.parametrize("members", [
+    (SMALL, BIG),
+    (SMALL, MID, BIG),
+    (SMALL, SMALL, BIG),        # replicated member
+], ids=["2het", "3het", "2+1rep"])
+def test_exact_schedule_matches_oracle(goal, members):
+    mix = make_mix(members)
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads, goal=goal)
+    want_a, want_v = _oracle(mix, rbm, workloads, goal)
+    res = schedule_network(mix, rbm, workloads, goal=goal)
+    assert res.assignment == want_a
+    assert res.goal_value(goal) == want_v
+    # the combined estimate is exactly the one the oracle recomputes
+    want = mix_estimate_for_assignment(mix, rbm, workloads, want_a)
+    got = res.network
+    assert (got.cycles, got.energy_pj, got.area_mm2, got.edp) == \
+        (want.cycles, want.energy_pj, want.area_mm2, want.edp)
+    # per_workload rows come from the assigned member
+    for i, mi in enumerate(res.assignment):
+        assert res.per_workload[i] is rbm[mi][i]
+
+
+def test_training_phases_schedule_independently():
+    """Training lowers each layer into FW/BW/WG phase workloads; each
+    is its own assignment slot and the exact argmin over all of them is
+    returned."""
+    workloads = analyze(TRAIN_TASK)
+    phases = [wl.phase for wl in workloads.intra]
+    assert set(phases) == {"FW", "BW", "WG"}
+    mix = make_mix((SMALL, BIG))
+    rbm = _results_by_member(mix, workloads)
+    want_a, want_v = _oracle(mix, rbm, workloads, "edp")
+    res = schedule_network(mix, rbm, workloads, goal="edp")
+    assert res.assignment == want_a
+    assert res.network.edp == want_v
+    assert len(res.assignment) == len(phases)
+
+
+# ---------------------------------------------------------------------------
+# combination semantics, hand-computed
+# ---------------------------------------------------------------------------
+def test_micro_combination_semantics():
+    """cycles = max over members, dynamic/static energy and area = sums,
+    utilization = member busy fraction of the makespan."""
+    mix = make_mix((SMALL, BIG))
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    est = mix_estimate_for_assignment(mix, rbm, workloads, (0, 1, 1))
+    assert est.cycles == max(est.member_cycles)
+    a, b = est.per_member
+    assert a is not None and b is not None
+    assert est.dynamic_pj == a.dynamic_pj + b.dynamic_pj
+    assert est.static_pj == a.static_pj + b.static_pj
+    assert est.cache_static_pj == a.cache_static_pj + b.cache_static_pj
+    assert est.energy_pj == est.dynamic_pj + est.static_pj \
+        + est.cache_static_pj
+    assert est.area_mm2 == mix.total_area() \
+        == SMALL.total_area() + BIG.total_area()
+    assert est.edp == est.cycles * est.energy_pj
+    for c, u in zip(est.member_cycles, est.utilization):
+        assert u == c / est.cycles
+    assert max(est.utilization) == 1.0
+
+
+def test_idle_member_leaks_but_does_no_work():
+    """All work on member 0: member 1 has no NetworkEstimate and zero
+    cycles, but its silicon still counts toward the mix area."""
+    mix = make_mix((SMALL, BIG))
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    est = mix_estimate_for_assignment(mix, rbm, workloads, (0, 0, 0))
+    assert est.per_member[1] is None
+    assert est.member_cycles[1] == 0.0
+    assert est.utilization == (1.0, 0.0)
+    assert est.area_mm2 == SMALL.total_area() + BIG.total_area()
+    # member 0 alone matches a direct single-arch evaluation
+    solo = evaluate_network(
+        mix.members[0], [r.estimate for r in rbm[0]],
+        list(workloads.preproc), list(workloads.activations),
+        mapping_buffer_words=_member_buffer_words(
+            mix.members[0], rbm[0], "Gbuf"))
+    assert est.cycles == solo.cycles
+    assert est.dynamic_pj == solo.dynamic_pj
+
+
+def test_one_member_mix_equals_direct_evaluate_network():
+    """The parity anchor: a singleton mix is bit-identical to the
+    single-architecture evaluation path."""
+    mix = make_mix((MID,))
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    res = schedule_network(mix, rbm, workloads, goal="edp")
+    assert res.assignment == (0,) * len(workloads.intra)
+    direct = evaluate_network(
+        MID, [r.estimate for r in rbm[0]],
+        list(workloads.preproc), list(workloads.activations),
+        mapping_buffer_words=_member_buffer_words(MID, rbm[0], "Gbuf"))
+    got = res.network
+    assert got.cycles == direct.cycles
+    assert got.dynamic_pj == direct.dynamic_pj
+    assert got.static_pj == direct.static_pj
+    assert got.cache_static_pj == direct.cache_static_pj
+    assert got.energy_pj == direct.energy_pj
+    assert got.edp == direct.edp
+    assert got.utilization == (1.0,)
+
+
+def test_shared_bandwidth_split():
+    """`make_mix(shared_bw_level=...)` halves each member's DRAM
+    bandwidth in a 2-mix and leaves singleton mixes untouched."""
+    mix2 = make_mix((SMALL, BIG), shared_bw_level="DRAM")
+    for hw, orig in zip(mix2.members, (SMALL, BIG)):
+        assert hw.levels[0].name == "DRAM"
+        assert hw.levels[0].bandwidth == orig.levels[0].bandwidth / 2
+    mix1 = make_mix((SMALL,), shared_bw_level="DRAM")
+    assert mix1.members[0].levels[0].bandwidth == \
+        SMALL.levels[0].bandwidth
+    with pytest.raises(ValueError):
+        make_mix((SMALL, BIG), shared_bw_level="NoSuchLevel")
+
+
+def test_mix_static_metric_surface():
+    mix = make_mix((SMALL, BIG))
+    assert mix.total_area() == SMALL.total_area() + BIG.total_area()
+    assert mix.total_pes() == SMALL.total_pes() + BIG.total_pes()
+    assert mix.frequency_hz == max(SMALL.frequency_hz, BIG.frequency_hz)
+    assert mix.n_members == 2
+    assert mix.name == f"mix[{SMALL.name}+{BIG.name}]"
+
+
+def test_clock_domain_conversion():
+    """A slower member's cycles are converted into the mix (fastest
+    member) clock domain before the makespan max."""
+    slow = dataclasses.replace(
+        SMALL, name="slow", frequency_hz=SMALL.frequency_hz / 2)
+    mix = make_mix((slow, BIG))
+    assert mix.frequency_hz == BIG.frequency_hz
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    est = mix_estimate_for_assignment(mix, rbm, workloads, (0, 1, 1))
+    assert est.member_cycles[0] == est.per_member[0].cycles * 2
+    assert est.member_cycles[1] == est.per_member[1].cycles
+
+
+# ---------------------------------------------------------------------------
+# greedy / hill-climb regime
+# ---------------------------------------------------------------------------
+def test_greedy_regime_is_deterministic_and_bounded():
+    """Forcing `exact_limit=1` exercises the LPT + hill-climb path: the
+    result is identical across runs and never better than the true
+    optimum (it may match it)."""
+    mix = make_mix((SMALL, MID, BIG))
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    exact = schedule_network(mix, rbm, workloads, goal="edp")
+    g1 = schedule_network(mix, rbm, workloads, goal="edp",
+                          exact_limit=1)
+    g2 = schedule_network(mix, rbm, workloads, goal="edp",
+                          exact_limit=1)
+    assert g1.assignment == g2.assignment
+    assert g1.network.edp == g2.network.edp
+    assert g1.network.edp >= exact.network.edp
+
+
+def test_bad_inputs_raise():
+    mix = make_mix((SMALL, BIG))
+    workloads = analyze(TASK)
+    rbm = _results_by_member(mix, workloads)
+    with pytest.raises(ValueError):
+        mix_estimate_for_assignment(mix, rbm, workloads, (0,))
+    with pytest.raises(ValueError):
+        schedule_network(mix, rbm[:1], workloads)
+    with pytest.raises(ValueError):
+        make_mix(())
+
+
+# ---------------------------------------------------------------------------
+# property variant (hypothesis-gated)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _ARCHES = [SMALL, MID, BIG]
+
+    @settings(max_examples=12, deadline=None)
+    @given(picks=st.lists(st.integers(0, 2), min_size=2, max_size=3),
+           goal=st.sampled_from(["edp", "latency", "energy"]))
+    def test_property_schedule_is_oracle_argmin(picks, goal):
+        mix = make_mix([_ARCHES[p] for p in picks])
+        workloads = analyze(TASK)
+        rbm = _results_by_member(mix, workloads, goal=goal)
+        want_a, want_v = _oracle(mix, rbm, workloads, goal)
+        res = schedule_network(mix, rbm, workloads, goal=goal)
+        assert res.assignment == want_a
+        assert res.goal_value(goal) == want_v

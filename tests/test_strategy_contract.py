@@ -22,8 +22,8 @@ import pytest
 
 from repro.core import (Conv2D, FC, MapperConfig, Pool2D, TaskDescription,
                         generate_arch_space)
-from repro.search import (STRATEGIES, ArchSpace, ResultCache, Strategy,
-                          make_strategy, register, run_search)
+from repro.search import (STRATEGIES, ArchSpace, MixSpace, ResultCache,
+                          Strategy, make_strategy, register, run_search)
 
 ALL_STRATEGIES = sorted(STRATEGIES)
 
@@ -151,6 +151,55 @@ def test_per_seed_determinism(name):
 
 
 # ---------------------------------------------------------------------------
+# the same contract over a heterogeneous MixSpace lattice
+# ---------------------------------------------------------------------------
+def synthetic_mix_space() -> MixSpace:
+    """A 2-slot mix lattice (counts axis + per-slot copies of the base
+    axes) whose builders are never invoked — strategies see only a
+    bigger ArchSpace and must honor the identical protocol on it."""
+    base = ArchSpace({"a": (1, 2, 4), "b": (16, 32)}, lambda a, b: None)
+    return MixSpace(base, slots=2, counts=((1, 1), (2, 1)))
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+@pytest.mark.parametrize("max_n", [1, 4])
+def test_mix_space_ask_bounds_and_coord_validity(name, max_n):
+    space = synthetic_mix_space()
+    assert space.axis_names[0] == "counts" and space.ndim == 5
+    proposed = drive(make_strategy(name, space, seed=0), space,
+                     rounds=200, max_n=max_n)
+    assert proposed, f"{name} proposed nothing over a MixSpace"
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+def test_mix_space_per_seed_determinism(name):
+    space = synthetic_mix_space()
+    seqs = [drive(make_strategy(name, space, seed=11), space,
+                  rounds=40, max_n=3) for _ in range(2)]
+    assert seqs[0] == seqs[1] and seqs[0]
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+def test_mix_space_exhausted_is_permanent(name):
+    space = synthetic_mix_space()
+    strat = make_strategy(name, space, seed=1)
+    drive(strat, space, rounds=500, max_n=8)
+    if strat.exhausted:
+        for _ in range(3):
+            assert strat.ask(8) == []
+            assert strat.exhausted
+
+
+@pytest.mark.parametrize("name", ["exhaustive", "random", "bandit"])
+def test_mix_space_finite_proposers_cover_and_exhaust(name):
+    space = synthetic_mix_space()
+    strat = make_strategy(name, space, seed=2)
+    proposed = drive(strat, space, rounds=500, max_n=5)
+    assert strat.exhausted
+    assert len(proposed) == len(set(proposed)) == space.size
+
+
+# ---------------------------------------------------------------------------
 # budget-respecting termination through the real driver
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
@@ -167,6 +216,25 @@ def test_run_search_budget_and_termination(name, shared_cache):
     assert rep.strategy == name
     assert 1 <= rep.n_evaluated <= 3
     assert len(rep.all_archs) == rep.n_evaluated
+    assert rep.goal_value() == min(r.goal_value("edp")
+                                   for r in rep.all_archs)
+
+
+@pytest.mark.parametrize("name", ALL_STRATEGIES)
+def test_run_search_budget_over_real_mix_space(name, shared_cache):
+    """Every registered strategy drives a real (tiny) heterogeneous
+    MixSpace through run_search within budget; every evaluated point is
+    a scheduled MixResult."""
+    base = ArchSpace.spatial(num_pes=(16, 64), rf_words=(64,),
+                             gbuf_words=(2048,), bits=16)
+    space = MixSpace(base, slots=2, counts=((1, 1),),
+                     shared_bw_level="DRAM")
+    rep = run_search(TASK, space, goal="edp", cfg=CFG, strategy=name,
+                     budget=3, seed=5, cache=shared_cache)
+    assert 1 <= rep.n_evaluated <= 3
+    for res in rep.all_archs:
+        assert res.hardware.n_members == 2
+        assert len(res.assignment) == 3
     assert rep.goal_value() == min(r.goal_value("edp")
                                    for r in rep.all_archs)
 
